@@ -1,0 +1,39 @@
+"""Benchmark utilities: wall-clock timing of jit'd callables + CSV rows.
+
+This container is CPU-only, so wall-clock numbers characterise the
+*algorithms* under XLA:CPU; the `derived` column carries the analytical
+v5e numbers (cost model / speedups) that transfer to the target hardware.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, List
+
+import jax
+
+ROWS: List[str] = []
+
+
+def timeit(fn: Callable, *args, reps: int = 5, warmup: int = 2) -> float:
+    """Median wall-clock µs of a jit'd callable."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2] * 1e6
+
+
+def emit(name: str, us: float, derived: str = ""):
+    row = f"{name},{us:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def geomean(xs):
+    import numpy as np
+    xs = np.asarray(list(xs), dtype=float)
+    return float(np.exp(np.mean(np.log(np.maximum(xs, 1e-12)))))

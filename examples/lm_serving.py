@@ -1,0 +1,18 @@
+"""Batched LM serving: prefill a batch of prompts into the KV cache, then
+decode greedily — the serve_step that the decode_32k / long_500k dry-run
+cells lower at production scale.
+
+    PYTHONPATH=src python examples/lm_serving.py [--arch rwkv6-3b]
+"""
+import argparse
+
+from repro.launch import serve
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="qwen3-8b")
+ap.add_argument("--batch", type=int, default=4)
+ap.add_argument("--gen", type=int, default=16)
+args = ap.parse_args()
+
+serve.main(["--arch", args.arch, "--reduced", "--batch", str(args.batch),
+            "--prompt-len", "16", "--gen", str(args.gen)])

@@ -1,0 +1,22 @@
+"""End-to-end driver (deliverable b): train a ~100M-parameter LM for a few
+hundred steps on the deterministic synthetic Markov language, with
+checkpointing + fault-tolerant loop. Loss decreases by several nats.
+
+    PYTHONPATH=src python examples/train_100m.py [--steps 300]
+"""
+import argparse
+
+from repro.launch import train
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=300)
+ap.add_argument("--arch", default="qwen3-8b")
+args = ap.parse_args()
+
+losses = train.main([
+    "--arch", args.arch, "--reduced",
+    "--steps", str(args.steps), "--batch", "8", "--seq", "256",
+    "--lr", "1e-3", "--ckpt-dir", "/tmp/repro_100m",
+    "--ckpt-every", "100", "--log-every", "20",
+])
+print(f"loss: {losses[0]:.3f} → {losses[-1]:.3f} over {args.steps} steps")

@@ -1,0 +1,72 @@
+"""Generate the EXPERIMENTS.md tables from results/ JSON artifacts."""
+import json
+import pathlib
+import sys
+
+sys.path.insert(0, "src")
+sys.path.insert(0, ".")
+
+from repro import configs as cfglib                     # noqa: E402
+from repro.configs import shapes as shapelib            # noqa: E402
+from benchmarks import roofline                         # noqa: E402
+
+R = pathlib.Path("results")
+
+
+def dryrun_table():
+    print("| arch | shape | mesh | params | compile_s | param B/dev | "
+          "HLO flops/dev | coll B/dev | temp B/dev |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for a in cfglib.ARCH_NAMES:
+        for s in shapelib.SHAPE_NAMES:
+            for m in ("single", "multi"):
+                f = R / "dryrun" / f"{a}__{s}__{m}.json"
+                if not f.exists():
+                    continue
+                d = json.loads(f.read_text())
+                if d.get("status") == "skipped":
+                    if m == "single":
+                        print(f"| {a} | {s} | — | — | SKIP: sub-quadratic-"
+                              f"attention arch required | | | | |")
+                    continue
+                if d.get("status") != "ok":
+                    print(f"| {a} | {s} | {m} | ERROR | | | | | |")
+                    continue
+                ma = d.get("memory_analysis", {})
+                print(f"| {a} | {s} | {m} | {d['num_params']/1e9:.2f}B "
+                      f"| {d['compile_s']} | {d['param_bytes_per_device']/1e6:.0f}M "
+                      f"| {d['cost_analysis'].get('flops', 0):.2e} "
+                      f"| {d['collectives']['total_bytes']:.2e} "
+                      f"| {ma.get('temp_size_in_bytes', 0):.2e} |")
+
+
+def roofline_table():
+    rows = []
+    for a in cfglib.ARCH_NAMES:
+        cfg = cfglib.get_config(a)
+        for s in shapelib.SHAPE_NAMES:
+            if shapelib.cell_applicable(cfg, s):
+                continue
+            r = roofline.roofline_row(a, s)
+            if r:
+                rows.append(r)
+    print("| arch | shape | compute_s | memory_s | collective_s | bottleneck "
+          "| MODEL_FLOPS/chip | MODEL/HLO | MFU bound |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        print(f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4f} "
+              f"| {r['memory_s']:.4f} | {r['collective_s']:.4f} "
+              f"| **{r['bottleneck']}** | {r['model_flops']:.2e} "
+              f"| {r['model_over_hlo']:.2f} | {r['mfu_bound']:.3f} |")
+    return rows
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if which in ("all", "dryrun"):
+        print("### Dry-run table\n")
+        dryrun_table()
+        print()
+    if which in ("all", "roofline"):
+        print("### Roofline table\n")
+        roofline_table()

@@ -1,0 +1,154 @@
+"""Sharded, fault-tolerant checkpointing.
+
+Layout:  <dir>/step_<N>/ {leaf files *.npy + MANIFEST.json}
+Atomicity: leaves are written into a ``.tmp-step_<N>`` directory, the
+manifest is written last, then the directory is atomically renamed —
+a crash mid-save can never produce a directory that ``latest_step`` will
+pick up.  ``save_async`` snapshots to host memory synchronously (so the
+training loop can donate buffers) and writes on a background thread.
+
+Elastic restore: leaves are loaded to host then ``jax.device_put`` with the
+*target* sharding — restoring onto a different mesh shape than the one that
+saved is supported (tested in tests/test_checkpoint.py).
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import pathlib
+import re
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+_STEP_RE = re.compile(r"^step_(\d+)$")
+
+
+def _leaf_key(path) -> str:
+    return jax.tree_util.keystr(path).replace("/", "_")
+
+
+def _flatten(tree):
+    return jax.tree_util.tree_flatten_with_path(tree)
+
+
+def save(tree: Any, directory: str | os.PathLike, step: int,
+         keep: Optional[int] = None) -> pathlib.Path:
+    """Synchronous atomic save. Returns the final step directory."""
+    directory = pathlib.Path(directory)
+    directory.mkdir(parents=True, exist_ok=True)
+    tmp = directory / f".tmp-step_{step}"
+    final = directory / f"step_{step}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir()
+
+    leaves, _ = _flatten(tree)
+    manifest = {"step": step, "leaves": []}
+    for path, leaf in leaves:
+        arr = np.asarray(jax.device_get(leaf))
+        key = _leaf_key(path)
+        fname = hashlib.sha1(key.encode()).hexdigest()[:20] + ".npy"
+        np.save(tmp / fname, arr)
+        manifest["leaves"].append({
+            "key": key, "file": fname,
+            "shape": list(arr.shape), "dtype": str(arr.dtype)})
+    (tmp / "MANIFEST.json").write_text(json.dumps(manifest))
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)
+    if keep is not None:
+        _retain(directory, keep)
+    return final
+
+
+_PENDING: list[threading.Thread] = []
+
+
+def save_async(tree: Any, directory, step: int,
+               keep: Optional[int] = None) -> threading.Thread:
+    """Snapshot to host now, write in the background."""
+    host_tree = jax.tree_util.tree_map(
+        lambda x: np.asarray(jax.device_get(x)), tree)
+    th = threading.Thread(target=save, args=(host_tree, directory, step, keep),
+                          daemon=True)
+    th.start()
+    _PENDING.append(th)
+    return th
+
+
+def wait_pending():
+    for th in _PENDING:
+        th.join()
+    _PENDING.clear()
+
+
+def latest_step(directory) -> Optional[int]:
+    directory = pathlib.Path(directory)
+    if not directory.exists():
+        return None
+    steps = []
+    for child in directory.iterdir():
+        m = _STEP_RE.match(child.name)
+        if m and (child / "MANIFEST.json").exists():
+            steps.append(int(m.group(1)))
+    return max(steps) if steps else None
+
+
+def restore(target_tree: Any, directory, step: Optional[int] = None,
+            shardings: Any = None) -> Any:
+    """Restore into the structure of ``target_tree``.
+
+    shardings: optional pytree (same structure or prefix) of
+    jax.sharding.Sharding — enables elastic restore onto a new mesh."""
+    directory = pathlib.Path(directory)
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {directory}")
+    d = directory / f"step_{step}"
+    manifest = json.loads((d / "MANIFEST.json").read_text())
+    by_key = {l["key"]: l for l in manifest["leaves"]}
+
+    leaves, treedef = _flatten(target_tree)
+    shard_leaves = None
+    if shardings is not None:
+        shard_leaves = jax.tree_util.tree_leaves(
+            shardings, is_leaf=lambda x: isinstance(x, jax.sharding.Sharding))
+        if len(shard_leaves) == 1:
+            shard_leaves = shard_leaves * len(leaves)
+
+    out = []
+    for i, (path, leaf) in enumerate(leaves):
+        key = _leaf_key(path)
+        if key not in by_key:
+            raise KeyError(f"checkpoint {d} missing leaf {key}")
+        arr = np.load(d / by_key[key]["file"])
+        want = np.dtype(by_key[key]["dtype"])
+        if arr.dtype != want:
+            # np.load round-trips extension dtypes (bfloat16, …) as raw
+            # void bytes — reinterpret via the manifest dtype
+            arr = arr.view(want) if arr.dtype.kind == "V" else arr.astype(want)
+        expect = tuple(getattr(leaf, "shape", arr.shape))
+        if tuple(arr.shape) != expect:
+            raise ValueError(
+                f"leaf {key}: checkpoint shape {arr.shape} != target {expect}")
+        if shard_leaves is not None:
+            out.append(jax.device_put(arr, shard_leaves[i]))
+        else:
+            out.append(jax.device_put(arr.astype(
+                getattr(leaf, "dtype", arr.dtype))))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _retain(directory: pathlib.Path, keep: int):
+    steps = sorted(
+        int(_STEP_RE.match(c.name).group(1))
+        for c in directory.iterdir()
+        if _STEP_RE.match(c.name) and (c / "MANIFEST.json").exists())
+    for s in steps[:-keep]:
+        shutil.rmtree(directory / f"step_{s}", ignore_errors=True)

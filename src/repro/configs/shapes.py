@@ -1,0 +1,80 @@
+"""Assigned input-shape cells and ShapeDtypeStruct stand-ins (dry-run).
+
+  train_4k     seq=4,096   global_batch=256   → train_step
+  prefill_32k  seq=32,768  global_batch=32    → forward (prefill)
+  decode_32k   seq=32,768  global_batch=128   → serve_step (1 new token,
+                                                KV/state cache of seq_len)
+  long_500k    seq=524,288 global_batch=1     → serve_step; needs
+               sub-quadratic attention ⇒ runs only for SSM/hybrid archs
+               (rwkv6-3b, jamba-v0.1-52b); skip documented for the 8 pure
+               full-attention archs (DESIGN.md §5).
+
+``input_specs`` returns weak-type-correct, shardable ShapeDtypeStructs for
+every model input — no device allocation (the full configs are exercised
+only through lower/compile).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                  # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524_288, 1, "decode"),
+}
+
+SHAPE_NAMES: List[str] = list(SHAPES)
+
+
+def cell_applicable(cfg: ModelConfig, shape: str) -> Optional[str]:
+    """None if runnable, else the skip reason (recorded in EXPERIMENTS.md)."""
+    if shape == "long_500k" and not cfg.supports_long_context:
+        return ("pure full-attention arch: 500k decode needs sub-quadratic "
+                "attention (run only for SSM/hybrid archs)")
+    return None
+
+
+def input_specs(cfg: ModelConfig, shape: str) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Model-input stand-ins for a shape cell (token batch for training,
+    request batch for serving; stubbed frontend embeddings where the arch
+    needs them)."""
+    cell = SHAPES[shape]
+    b, s = cell.global_batch, cell.seq_len
+    i32 = jnp.int32
+    act = jnp.dtype(cfg.dtype)
+    if cell.kind in ("train", "prefill"):
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((b, s), i32),
+            "labels": jax.ShapeDtypeStruct((b, s), i32),
+        }
+        if cfg.family == "vlm":
+            specs["prefix_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.num_prefix_embeds, cfg.d_model), act)
+        if cfg.family == "audio":
+            from repro.configs.whisper_tiny import NUM_FRAMES
+            specs["enc_embeds"] = jax.ShapeDtypeStruct(
+                (b, NUM_FRAMES, cfg.d_model), act)
+        return specs
+    # decode: one new token against a cache of seq_len
+    specs = {"tokens": jax.ShapeDtypeStruct((b, 1), i32)}
+    if cfg.family == "audio":
+        from repro.configs.whisper_tiny import NUM_FRAMES
+        specs["enc_out"] = jax.ShapeDtypeStruct(
+            (b, NUM_FRAMES, cfg.d_model), act)
+    return specs

@@ -1,0 +1,26 @@
+"""GeoT core: tensor-centric segment reduction for geometric deep learning.
+
+Public API (paper §II-B, §IV):
+    segment_reduce, index_segment_reduce, index_weight_segment_reduce,
+    segment_softmax, segment_matmul, sddmm, gather
+"""
+from repro.core.config_space import KernelConfig, all_configs, default_config
+from repro.core.features import InputFeatures, extract_features
+from repro.core.heuristics import hand_crafted_config, select_config
+from repro.core.ops import (
+    gather,
+    index_segment_reduce,
+    index_weight_segment_reduce,
+    sddmm,
+    segment_matmul,
+    segment_reduce,
+    segment_softmax,
+)
+
+__all__ = [
+    "KernelConfig", "all_configs", "default_config",
+    "InputFeatures", "extract_features",
+    "select_config", "hand_crafted_config",
+    "segment_reduce", "index_segment_reduce", "index_weight_segment_reduce",
+    "segment_softmax", "segment_matmul", "sddmm", "gather",
+]

@@ -1,0 +1,91 @@
+"""Tunable hierarchical tiling space (paper §III-A/B, Table I), re-based on
+TPU geometry.
+
+Parameter mapping (GPU → TPU, see DESIGN.md §2):
+
+    T_M, T_N  (thread groups / block)   →  S_b, N_b  (out-rows / cols per VMEM block)
+    M_t, N_t  (data / thread group)     →  M_b       (input rows per chunk)
+    G_t       (synced threads, PR only) →  K_c       (rows per MXU sub-matmul)
+    schedule  (SR / PR)                 →  schedule  (VPU row-scan / MXU one-hot)
+
+Like the paper (§III-C) we prune the space to a constant-size candidate set
+grounded in hardware constraints: N_b multiples of the 128-lane register
+width, M_b multiples of the 8-sublane height, and VMEM budget
+(in + out + one-hot tiles ≤ ~16 MiB/2 for double buffering).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Iterator, List
+
+VMEM_BYTES = 16 * 1024 * 1024          # v5e VMEM per core
+LANES = 128                            # vector register lanes
+SUBLANES = 8                           # vector register sublanes (fp32)
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelConfig:
+    """A point in the tunable space ⟨schedule, S_b, N_b, M_b, K_c⟩."""
+    schedule: str = "SR"    # "SR" (VPU sequential) | "PR" (MXU one-hot)
+    s_b: int = 128          # output rows per block (PR out-tile height)
+    n_b: int = 128          # feature columns per block
+    m_b: int = 256          # input rows per chunk
+    k_c: int = 8            # MXU contraction sub-chunk (PR only; SR ⇒ 1)
+
+    def __post_init__(self):
+        if self.schedule == "SR":
+            object.__setattr__(self, "k_c", 1)
+
+    def astuple(self):
+        return (self.schedule, self.s_b, self.n_b, self.m_b, self.k_c)
+
+    def vmem_bytes(self, dtype_bytes: int = 4) -> int:
+        """VMEM working set: X chunk + out block + one-hot (PR), x2 buffered."""
+        x_tile = self.m_b * self.n_b * dtype_bytes
+        out_tile = self.s_b * self.n_b * dtype_bytes
+        onehot = self.m_b * self.s_b * dtype_bytes if self.schedule == "PR" else 0
+        idx_tile = self.m_b * 4
+        return 2 * (x_tile + idx_tile) + out_tile + onehot
+
+
+# Pruned candidate ranges (paper §III-C prunes to constant space; ours are
+# anchored to (8,128) tiling and MXU dims instead of warp sizes).
+SCHEDULES = ("SR", "PR")
+S_B_CANDIDATES = (64, 128, 256)
+N_B_CANDIDATES = (128, 256, 512)
+M_B_CANDIDATES = (128, 256, 512, 1024)
+K_C_CANDIDATES = (8, 16, 32)
+
+
+def enumerate_configs(feat_dim: int | None = None,
+                      dtype_bytes: int = 4) -> Iterator[KernelConfig]:
+    """All valid configs (VMEM-feasible; N_b ≤ padded feature dim)."""
+    for sched in SCHEDULES:
+        kcs = (1,) if sched == "SR" else K_C_CANDIDATES
+        for s_b, n_b, m_b, k_c in itertools.product(
+                S_B_CANDIDATES, N_B_CANDIDATES, M_B_CANDIDATES, kcs):
+            cfg = KernelConfig(sched, s_b, n_b, m_b, k_c)
+            if cfg.vmem_bytes(dtype_bytes) > VMEM_BYTES:
+                continue
+            if k_c > m_b:
+                continue
+            if feat_dim is not None and n_b > max(LANES, _round_up(feat_dim, LANES)):
+                continue
+            yield cfg
+
+
+def all_configs(feat_dim: int | None = None) -> List[KernelConfig]:
+    return list(enumerate_configs(feat_dim))
+
+
+def default_config(feat_dim: int = 128) -> KernelConfig:
+    """Static fallback (the 'hand-crafted rule' baseline of Fig. 8):
+    SR for F > 4 else PR, mirroring the paper's empirical rule."""
+    if feat_dim > 4:
+        return KernelConfig("SR", 128, min(512, _round_up(feat_dim, LANES)), 512, 1)
+    return KernelConfig("PR", 128, 128, 256, 16)
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m

@@ -1,0 +1,140 @@
+"""Analytical TPU cost model for blocked segment reduction.
+
+Plays two roles (DESIGN.md §7):
+  1. Populates the performance database on this CPU-only container (the
+     paper benchmarks configs on an A100; we derive GFlops from a v5e
+     roofline model instead — the *pipeline* downstream of the database is
+     identical to the paper's).
+  2. Provides the per-config napkin math used in §Perf hillclimbing.
+
+Model (see DESIGN.md §2 for the schedule mapping):
+
+grid = (ceil(S / S_b) out-blocks) × (ceil(N / N_b) col-tiles) × (chunks).
+Each out-block consumes its input row range [row_ptr[b], row_ptr[b+1]) in
+chunks of M_b rows; boundary chunks are re-read by adjacent out-blocks.
+
+  PR (MXU):  per chunk, one-hot P (M_b × S_b) is built on the VPU and
+             out += Pᵀ @ X on the MXU in ceil(M_b/K_c) sub-matmuls of
+             contraction depth K_c (deeper ⇒ better pipeline utilisation).
+  SR (VPU):  per chunk, a sequential row walk, vectorized across N lanes;
+             each segment end costs a dynamic-slice flush.
+
+All times in seconds.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.core.config_space import KernelConfig, LANES, SUBLANES
+
+
+@dataclasses.dataclass(frozen=True)
+class TpuSpec:
+    name: str = "tpu_v5e"
+    peak_flops_bf16: float = 197e12       # per chip
+    peak_flops_fp32: float = 98.5e12      # MXU fp32 ~ half
+    hbm_bw: float = 819e9                 # bytes/s
+    vpu_flops: float = 4 * 8 * 128 * 0.94e9  # 4 ALUs × (8,128) regs × clock
+    ici_bw: float = 50e9                  # bytes/s per link (≈ 45-50 GB/s)
+    grid_step_overhead: float = 0.3e-6    # s per grid step (scalar core)
+    dyn_store_cycles: float = 16.0        # VMEM dynamic-row store
+    clock: float = 0.94e9
+
+
+V5E = TpuSpec()
+
+
+def _ceil(a: float, b: float) -> int:
+    return int(math.ceil(a / b))
+
+
+@dataclasses.dataclass(frozen=True)
+class CostBreakdown:
+    compute_s: float
+    memory_s: float
+    overhead_s: float
+
+    @property
+    def total_s(self) -> float:
+        # compute/memory overlap (double-buffered DMA); overhead serializes
+        return max(self.compute_s, self.memory_s) + self.overhead_s
+
+    def gflops(self, useful_flops: float) -> float:
+        return useful_flops / self.total_s / 1e9
+
+
+def segment_reduce_cost(m: int, s: int, n: int, cfg: KernelConfig,
+                        dtype_bytes: int = 4, spec: TpuSpec = V5E,
+                        skew: float = 1.0) -> CostBreakdown:
+    """Cost of one blocked segment reduction.
+
+    m: input rows (|E|), s: segments (|V|), n: feature dim F.
+    skew ≥ 1 inflates the chunk count of the heaviest out-block
+    (power-law degree distributions make max_chunks > mean_chunks)."""
+    n_pad = max(n, LANES)                      # lane padding below 128
+    n_tiles = _ceil(n_pad, cfg.n_b)
+    n_b_eff = min(cfg.n_b, n_pad)
+    out_blocks = _ceil(s, cfg.s_b)
+
+    rows_per_block = m / out_blocks
+    chunks_per_block = max(1.0, rows_per_block / cfg.m_b)
+    # boundary chunks shared with the neighbouring out-block are re-read
+    reread_rows = min(2 * cfg.m_b, rows_per_block) * (out_blocks - 1)
+    total_rows_read = m + max(0.0, reread_rows)
+
+    # ---- memory ----
+    x_bytes = total_rows_read * n_b_eff * dtype_bytes * n_tiles
+    idx_bytes = total_rows_read * 4 * n_tiles
+    y_bytes = s * n_pad * dtype_bytes
+    memory_s = (x_bytes + idx_bytes + y_bytes) / spec.hbm_bw
+
+    # ---- compute ----
+    if cfg.schedule == "PR":
+        # one-hot build on the VPU + Pᵀ@X on the MXU
+        onehot_ops = total_rows_read * cfg.s_b * n_tiles
+        vpu_s = onehot_ops / spec.vpu_flops
+        macs = total_rows_read * cfg.s_b * n_b_eff * n_tiles
+        peak = spec.peak_flops_bf16 if dtype_bytes == 2 else spec.peak_flops_fp32
+        # MXU efficiency: output-tile padding × contraction pipeline fill
+        pad_eff = (min(cfg.s_b, 128) / 128.0) * (min(n_b_eff, 128) / 128.0)
+        pipe_eff = cfg.k_c / (cfg.k_c + 4.0)
+        mxu_s = 2.0 * macs / (peak * max(pad_eff, 1e-3) * pipe_eff)
+        compute_s = vpu_s + mxu_s
+    else:
+        # sequential row walk: one (1, N_b) VREG add per row; rows do not
+        # parallelize, so the effective width is n_b_eff lanes only
+        row_cycles = max(1.0, n_b_eff / LANES) * (SUBLANES / 8.0)
+        walk_s = total_rows_read * row_cycles * n_tiles / spec.clock
+        flush_s = min(m, s + out_blocks) * spec.dyn_store_cycles / spec.clock * n_tiles
+        compute_s = walk_s + flush_s
+
+    # ---- grid overhead ----
+    grid_steps = out_blocks * n_tiles * max(1, int(chunks_per_block * skew))
+    overhead_s = grid_steps * spec.grid_step_overhead
+
+    return CostBreakdown(compute_s, memory_s, overhead_s)
+
+
+def useful_flops(m: int, n: int) -> float:
+    """One add per input element is the useful work of a segment sum."""
+    return float(m) * float(n)
+
+
+def spmm_cost(m: int, s: int, n: int, cfg: KernelConfig,
+              dtype_bytes: int = 4, spec: TpuSpec = V5E) -> CostBreakdown:
+    """Fused gather + weight + segment reduce (index_weight_segment_reduce).
+
+    Adds the gather traffic of H rows (random access ⇒ DMA granularity
+    penalty when N_b*dtype < 512B) and the per-edge multiply."""
+    base = segment_reduce_cost(m, s, n, cfg, dtype_bytes, spec)
+    n_pad = max(n, LANES)
+    n_tiles = _ceil(n_pad, cfg.n_b)
+    n_b_eff = min(cfg.n_b, n_pad)
+    row_bytes = n_b_eff * dtype_bytes
+    dma_eff = min(1.0, row_bytes / 512.0)      # 512B DMA granularity
+    gather_bytes = m * row_bytes * n_tiles / max(dma_eff, 1e-3)
+    mul_s = m * n_b_eff * n_tiles / spec.vpu_flops
+    return CostBreakdown(base.compute_s + mul_s,
+                         base.memory_s + gather_bytes / spec.hbm_bw,
+                         base.overhead_s)

@@ -1,0 +1,43 @@
+"""O(1)-complexity input features for data-aware config selection
+(paper §III-C): ``Idx_size``, ``Idx_max`` (O(1) because Idx is sorted —
+it is the last element), ``avg = Idx_size / Idx_max``, plus feature size F.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class InputFeatures:
+    idx_size: int        # M = |E|
+    idx_max: int         # ≈ number of live segments (last element + 1)
+    feat: int            # F = N
+
+    @property
+    def avg(self) -> float:
+        """Average segment length (≈ average in-degree)."""
+        return self.idx_size / max(self.idx_max, 1)
+
+    def as_vector(self) -> np.ndarray:
+        """Feature vector for the decision tree: log-scaled sizes + avg + F.
+
+        Log scaling matches the orders-of-magnitude spread across graph
+        datasets (Table II spans 9K → 23M edges)."""
+        return np.array([
+            np.log2(max(self.idx_size, 1)),
+            np.log2(max(self.avg, 2 ** -4)),
+            np.log2(max(self.feat, 1)),
+        ], dtype=np.float64)
+
+    @staticmethod
+    def names() -> list[str]:
+        return ["log2_idx_size", "log2_avg", "log2_feat"]
+
+
+def extract_features(idx, feat: int) -> InputFeatures:
+    """idx must be sorted non-decreasing; max is O(1) (last element)."""
+    idx = np.asarray(idx)
+    idx_max = int(idx[-1]) + 1 if idx.size else 1
+    return InputFeatures(idx_size=int(idx.size), idx_max=idx_max, feat=int(feat))

@@ -1,0 +1,35 @@
+"""Runtime config selection (paper Fig. 5, right side).
+
+Order of precedence:
+  1. generated rules (``_generated_rules.py``, produced by
+     ``python -m repro.core.train_rules``) — the deployed path;
+  2. the hand-crafted static rule (Fig. 8's baseline) as fallback.
+"""
+from __future__ import annotations
+
+import math
+
+from repro.core.config_space import KernelConfig, default_config
+
+try:  # the generated module is committed, but keep the fallback honest
+    from repro.core import _generated_rules
+except ImportError:  # pragma: no cover
+    _generated_rules = None
+
+
+def select_config(idx_size: int, num_segments: int, feat: int) -> KernelConfig:
+    """Pick ⟨schedule, S_b, N_b, M_b, K_c⟩ from O(1) features."""
+    if _generated_rules is None:
+        return default_config(feat)
+    log2_size = math.log2(max(idx_size, 1))
+    avg = idx_size / max(num_segments, 1)
+    log2_avg = math.log2(max(avg, 2 ** -4))
+    log2_feat = math.log2(max(feat, 1))
+    return _generated_rules.select(log2_size, log2_avg, log2_feat)
+
+
+def hand_crafted_config(idx_size: int, num_segments: int,
+                        feat: int) -> KernelConfig:
+    """The engineering-experience baseline of Fig. 8 (explicitly kept for
+    the ablation benchmark)."""
+    return default_config(feat)

@@ -1,0 +1,345 @@
+"""GeoT core public API: tensor-centric segment reduction (paper §II-B, §IV).
+
+All ops take *plain dense tensors + an index vector* (format-agnostic, §IV).
+``Idx`` is required to be sorted non-decreasing, as guaranteed by GNN
+frameworks (paper §IV) and by our MoE dispatch (sort by expert id).
+
+Every op is jit-able and differentiable.  Autograd (paper §VI "future work",
+implemented here as a beyond-paper extension) uses the duality:
+
+    d(segment_reduce)/dX  = gather       (Y_bar[idx])
+    d(gather)/dH          = segment_reduce (scatter-add of cotangents)
+
+The ``impl`` argument selects the backend:
+  * ``"ref"``     — pure-jnp oracle (XLA scatter/gather),
+  * ``"blocked"`` — the GeoT-TPU blocked algorithm expressed in jnp
+                    (the algorithmic skeleton of the Pallas kernel, runs on
+                    any backend; used for CPU wall-clock benchmarking),
+  * ``"pallas"``  — the Pallas TPU kernel (interpret=True on CPU).
+``config``: ``None`` → data-aware generated rules pick it (paper §III-C);
+or an explicit :class:`~repro.core.config_space.KernelConfig`.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.config_space import KernelConfig
+
+__all__ = [
+    "segment_reduce",
+    "index_segment_reduce",
+    "index_weight_segment_reduce",
+    "segment_softmax",
+    "segment_matmul",
+    "sddmm",
+    "gather",
+]
+
+
+# ---------------------------------------------------------------------------
+# Reference semantics (pure jnp oracles)
+# ---------------------------------------------------------------------------
+
+def _segment_reduce_ref(x, idx, num_segments: int, reduce: str):
+    if reduce == "sum":
+        return jax.ops.segment_sum(x, idx, num_segments, indices_are_sorted=True)
+    if reduce == "mean":
+        s = jax.ops.segment_sum(x, idx, num_segments, indices_are_sorted=True)
+        cnt = jax.ops.segment_sum(
+            jnp.ones((x.shape[0],), x.dtype), idx, num_segments, indices_are_sorted=True
+        )
+        return s / jnp.maximum(cnt, 1.0)[:, None]
+    if reduce == "max":
+        return jax.ops.segment_max(x, idx, num_segments, indices_are_sorted=True)
+    raise ValueError(f"unknown reduce: {reduce}")
+
+
+# ---------------------------------------------------------------------------
+# Blocked algorithm (GeoT-TPU skeleton in jnp) — used for CPU benchmarking
+# and as an executable spec of the Pallas kernel's tiling (paper §III-A/B).
+# ---------------------------------------------------------------------------
+
+def _segment_reduce_blocked(x, idx, num_segments: int, reduce: str,
+                            config: KernelConfig):
+    """Blocked segment reduction: PR schedule = one-hot matmul per chunk
+    (MXU analogue), SR schedule = per-chunk masked accumulate (VPU analogue).
+
+    Pure jnp; identical tiling to the Pallas kernel so its CPU wall-clock
+    tracks the kernel's algorithmic behaviour."""
+    if reduce != "sum":
+        # mean/max are routed through sum + postprocess / ref (paper §VI:
+        # generalizing the reduction type does not change the schedule).
+        if reduce == "mean":
+            s = _segment_reduce_blocked(x, idx, num_segments, "sum", config)
+            ones = jnp.ones((x.shape[0], 1), x.dtype)
+            cnt = _segment_reduce_blocked(ones, idx, num_segments, "sum", config)
+            return s / jnp.maximum(cnt, 1.0)
+        return _segment_reduce_ref(x, idx, num_segments, reduce)
+
+    m, n = x.shape
+    mb = config.m_b
+    num_chunks = (m + mb - 1) // mb
+    m_pad = num_chunks * mb
+    xp = jnp.pad(x, ((0, m_pad - m), (0, 0)))
+    # padding rows map to segment `num_segments` (dropped at the end)
+    idxp = jnp.pad(idx, (0, m_pad - m), constant_values=num_segments)
+
+    xc = xp.reshape(num_chunks, mb, n)
+    ic = idxp.reshape(num_chunks, mb)
+
+    def chunk_rank(icb):
+        """Local segment *rank* within a chunk (robust to gapped ids):
+        rank[i] = #distinct segment ids in icb[:i+1] - 1 ∈ [0, mb)."""
+        bnd = jnp.concatenate(
+            [jnp.ones((1,), bool), icb[1:] != icb[:-1]])
+        rank = jnp.cumsum(bnd.astype(jnp.int32)) - 1
+        # seg id owning each rank slot; unused slots → num_segments (dropped)
+        seg_ids = jnp.full((mb,), num_segments, icb.dtype).at[rank].set(icb)
+        return rank, seg_ids
+
+    if config.schedule == "PR":
+        # One-hot matmul per chunk (MXU analogue): rows reduce in parallel
+        # across the systolic array; segment boundaries are enforced by the
+        # one-hot structure (the analogue of shuffle invalidation).
+        def chunk_partial(xcb, icb):
+            rank, seg_ids = chunk_rank(icb)
+            onehot = (rank[:, None] == jnp.arange(mb)[None, :]).astype(x.dtype)
+            part = onehot.T @ xcb                   # (mb, n) partial sums
+            return part, seg_ids
+
+        parts, segs = jax.vmap(chunk_partial)(xc, ic)
+        parts = parts.reshape(num_chunks * mb, n)
+        segs = jnp.clip(segs.reshape(num_chunks * mb), 0, num_segments)
+        # combine: strictly fewer live rows than inputs whenever avg degree>1
+        y = jax.ops.segment_sum(parts, segs, num_segments + 1,
+                                indices_are_sorted=False)
+        return y[:num_segments]
+
+    # SR schedule: sequential accumulation down each chunk, expressed as a
+    # chunk-local prefix sum with flushes at segment boundaries
+    # (cumsum[end_of_rank] − cumsum[before start_of_rank]). This is the
+    # jnp rendering of the TPU VPU walk: accumulate row-by-row, emit at
+    # boundaries — O(M·N) adds, no matmul (unlike PR).
+    def chunk_partial_sr(xcb, icb):
+        rank, seg_ids = chunk_rank(icb)
+        cs = jnp.cumsum(xcb.astype(jnp.float32), axis=0)
+        rows = jnp.arange(mb, dtype=jnp.int32)
+        ends = jnp.full((mb,), -1, jnp.int32).at[rank].max(rows)
+        starts = jnp.full((mb,), mb - 1, jnp.int32).at[rank].min(rows)
+        upper = cs[jnp.clip(ends, 0, mb - 1)]
+        lower = jnp.where((starts > 0)[:, None],
+                          cs[jnp.clip(starts - 1, 0, mb - 1)], 0.0)
+        part = jnp.where((ends >= 0)[:, None], upper - lower, 0.0)
+        return part.astype(x.dtype), seg_ids
+
+    parts, segs = jax.vmap(chunk_partial_sr)(xc, ic)
+    parts = parts.reshape(num_chunks * mb, n)
+    segs = jnp.clip(segs.reshape(num_chunks * mb), 0, num_segments)
+    y = jax.ops.segment_sum(parts, segs, num_segments + 1,
+                            indices_are_sorted=False)
+    return y[:num_segments]
+
+
+# ---------------------------------------------------------------------------
+# Public ops with custom VJPs
+# ---------------------------------------------------------------------------
+
+def _dispatch_segment_reduce(x, idx, num_segments, reduce, impl, config):
+    if impl == "ref":
+        return _segment_reduce_ref(x, idx, num_segments, reduce)
+    if impl == "blocked":
+        cfg = config or _auto_config(idx, num_segments, x.shape[-1])
+        return _segment_reduce_blocked(x, idx, num_segments, reduce, cfg)
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        return kops.segment_reduce(x, idx, num_segments, reduce=reduce,
+                                   config=config)
+    raise ValueError(f"unknown impl: {impl}")
+
+
+def _auto_config(idx, num_segments, feat) -> KernelConfig:
+    from repro.core.heuristics import select_config
+    return select_config(int(idx.shape[0]), int(num_segments), int(feat))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
+def segment_reduce(x, idx, num_segments: int, reduce: str = "sum",
+                   impl: str = "ref", config: Optional[KernelConfig] = None):
+    """Y[s, :] = reduce_{i : idx[i] == s} X[i, :]   (paper Fig. 2).
+
+    idx must be sorted non-decreasing. Differentiable (sum/mean/max)."""
+    return _dispatch_segment_reduce(x, idx, num_segments, reduce, impl, config)
+
+
+def _segment_reduce_fwd(x, idx, num_segments, reduce, impl, config):
+    y = _dispatch_segment_reduce(x, idx, num_segments, reduce, impl, config)
+    if reduce == "max":
+        res = (idx, x, y)
+    elif reduce == "mean":
+        cnt = jax.ops.segment_sum(jnp.ones_like(idx, dtype=x.dtype), idx,
+                                  num_segments, indices_are_sorted=True)
+        res = (idx, cnt)
+    else:
+        res = (idx,)
+    return y, res
+
+
+def _segment_reduce_bwd(num_segments, reduce, impl, config, res, y_bar):
+    if reduce == "sum":
+        (idx,) = res
+        return (jnp.take(y_bar, idx, axis=0), None)
+    if reduce == "mean":
+        idx, cnt = res
+        scale = 1.0 / jnp.maximum(cnt, 1.0)
+        return (jnp.take(y_bar * scale[:, None], idx, axis=0), None)
+    idx, x, y = res
+    winner = (x == jnp.take(y, idx, axis=0)).astype(y_bar.dtype)
+    return (winner * jnp.take(y_bar, idx, axis=0), None)
+
+
+segment_reduce.defvjp(_segment_reduce_fwd, _segment_reduce_bwd)
+
+
+def gather(h, idx):
+    """Row gather (the message step of Listing 2). Differentiable with a
+    GeoT-backed VJP: d(gather) = scatter-add = sort + segment_reduce."""
+    return _gather(h, idx)
+
+
+@jax.custom_vjp
+def _gather(h, idx):
+    return jnp.take(h, idx, axis=0)
+
+
+def _gather_fwd(h, idx):
+    return jnp.take(h, idx, axis=0), (idx, h.shape[0])
+
+
+def _gather_bwd(res, g):
+    idx, num_rows = res
+    # sort-then-segment-reduce: GeoT's own primitive implements its VJP
+    order = jnp.argsort(idx)
+    dh = _segment_reduce_ref(jnp.take(g, order, axis=0),
+                             jnp.take(idx, order), num_rows, "sum")
+    return (dh, None)
+
+
+_gather.defvjp(_gather_fwd, _gather_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def index_segment_reduce(h, gather_idx, seg_idx, num_segments: int,
+                         reduce: str = "sum", impl: str = "ref",
+                         config: Optional[KernelConfig] = None):
+    """Fused message+aggregate (paper Listing 2, §IV):
+
+        Y[s] = reduce_{i: seg_idx[i]==s} H[gather_idx[i]]
+
+    Equivalent to ``segment_reduce(H[gather_idx], seg_idx)`` but fused so the
+    (|E|, N) message tensor never hits DRAM (format-agnostic SpMM with unit
+    weights)."""
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        return kops.gather_segment_reduce(h, gather_idx, seg_idx, num_segments,
+                                          reduce=reduce, config=config)
+    msg = jnp.take(h, gather_idx, axis=0)
+    return _dispatch_segment_reduce(msg, seg_idx, num_segments, reduce,
+                                    "ref" if impl == "ref" else impl, config)
+
+
+def _isr_fwd(h, gather_idx, seg_idx, num_segments, reduce, impl, config):
+    y = index_segment_reduce(h, gather_idx, seg_idx, num_segments, reduce,
+                             impl, config)
+    return y, (h, gather_idx, seg_idx, y)
+
+
+def _isr_bwd(num_segments, reduce, impl, config, res, y_bar):
+    h, gather_idx, seg_idx, y = res
+    if reduce == "sum":
+        g_edges = jnp.take(y_bar, seg_idx, axis=0)
+    elif reduce == "mean":
+        cnt = jax.ops.segment_sum(jnp.ones_like(seg_idx, dtype=y_bar.dtype),
+                                  seg_idx, num_segments, indices_are_sorted=True)
+        g_edges = jnp.take(y_bar / jnp.maximum(cnt, 1.0)[:, None], seg_idx, axis=0)
+    else:  # max
+        msg = jnp.take(h, gather_idx, axis=0)
+        winner = (msg == jnp.take(y, seg_idx, axis=0)).astype(y_bar.dtype)
+        g_edges = winner * jnp.take(y_bar, seg_idx, axis=0)
+    dh = jnp.zeros_like(h).at[gather_idx].add(g_edges)
+    return (dh, None, None)
+
+
+index_segment_reduce.defvjp(_isr_fwd, _isr_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
+def index_weight_segment_reduce(h, gather_idx, weight, seg_idx,
+                                num_segments: int, impl: str = "ref",
+                                config: Optional[KernelConfig] = None):
+    """Weighted fused message+aggregate ≡ SpMM (paper §IV):
+
+        Y[s] = Σ_{i: seg_idx[i]==s} w[i] * H[gather_idx[i]]
+
+    With (seg_idx, gather_idx, w) a sorted COO sparse matrix A, this is
+    Y = A @ H — cuSPARSE's workload, format-agnostic."""
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        return kops.gather_segment_reduce(h, gather_idx, seg_idx, num_segments,
+                                          weight=weight, config=config)
+    msg = jnp.take(h, gather_idx, axis=0) * weight[:, None].astype(h.dtype)
+    return _dispatch_segment_reduce(msg, seg_idx, num_segments, "sum",
+                                    "ref" if impl == "ref" else impl, config)
+
+
+def _iwsr_fwd(h, gather_idx, weight, seg_idx, num_segments, impl, config):
+    y = index_weight_segment_reduce(h, gather_idx, weight, seg_idx,
+                                    num_segments, impl, config)
+    return y, (h, gather_idx, weight, seg_idx)
+
+
+def _iwsr_bwd(num_segments, impl, config, res, y_bar):
+    h, gather_idx, weight, seg_idx = res
+    g_seg = jnp.take(y_bar, seg_idx, axis=0)
+    dh = jnp.zeros_like(h).at[gather_idx].add(
+        g_seg * weight[:, None].astype(y_bar.dtype))
+    # dW = SDDMM: per-edge dot of gathered rows (paper §VI)
+    dw = jnp.sum(jnp.take(h, gather_idx, axis=0).astype(y_bar.dtype) * g_seg,
+                 axis=-1).astype(weight.dtype)
+    return (dh, None, dw, None)
+
+
+index_weight_segment_reduce.defvjp(_iwsr_fwd, _iwsr_bwd)
+
+
+def sddmm(h_out, h_in, row_idx, col_idx):
+    """Sampled dense-dense matmul: per-edge dot products (paper §VI).
+    out[i] = <h_out[row_idx[i]], h_in[col_idx[i]]>."""
+    return jnp.sum(jnp.take(h_out, row_idx, axis=0) *
+                   jnp.take(h_in, col_idx, axis=0), axis=-1)
+
+
+def segment_softmax(x, idx, num_segments: int):
+    """Softmax within segments (GAT-style attention over sorted edges)."""
+    m = jax.ops.segment_max(x, idx, num_segments, indices_are_sorted=True)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    e = jnp.exp(x - jnp.take(m, idx, axis=0))
+    z = jax.ops.segment_sum(e, idx, num_segments, indices_are_sorted=True)
+    return e / jnp.take(jnp.maximum(z, 1e-20), idx, axis=0)
+
+
+def segment_matmul(x, group_sizes, w, impl: str = "ref",
+                   config: Optional[KernelConfig] = None):
+    """Grouped GEMM over contiguous segments (GeoT-extension; the MoE expert
+    hot path):  out[rows of segment e] = X[rows of segment e] @ W[e].
+
+    x: (M, K) sorted so rows of the same group are contiguous;
+    group_sizes: (E,) int32 rows per group (sum == M); w: (E, K, N)."""
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        return kops.segment_matmul(x, group_sizes, w, config=config)
+    return jax.lax.ragged_dot(x, w, group_sizes)

@@ -1,0 +1,87 @@
+"""End-to-end rule training pipeline (paper Fig. 5):
+
+    datasets → augment → offline benchmark sweep → performance database
+    → Top-1 per key → multi-output decision tree (SR + PR) → codegen
+    → ``_generated_rules.py``
+
+Run:  PYTHONPATH=src python -m repro.core.train_rules
+"""
+from __future__ import annotations
+
+import pathlib
+import sys
+
+import numpy as np
+
+from repro.core import codegen, perfdb
+from repro.core.decision_tree import MultiOutputDecisionTree
+from repro.core.features import InputFeatures
+
+
+def fit_schedule_rule(records):
+    """Fit the SR-vs-PR rule on F from the database.
+
+    The paper finds F > 4 ⇒ SR empirically on A100 (Fig. 4b, a memory-
+    coalescing effect). On TPU the trade-off moves: the PR one-hot matmul
+    adds S_b MACs/element, which rides *under* the bf16 roofline knee
+    (~240 FLOP/byte) — the MXU does the parallel reduction "for free" while
+    the kernel stays memory-bound, so PR can dominate at every F. We fit
+    the threshold that maximises agreement with the database instead of
+    porting the GPU constant (DESIGN.md §2, EXPERIMENTS.md §Bench-Fig8)."""
+    best_by_key: dict = {}
+    for r in records:
+        cur = best_by_key.get(r.features)
+        if cur is None or r.gflops > cur.gflops:
+            best_by_key[r.features] = r
+    from collections import defaultdict
+    wins = defaultdict(lambda: [0, 0])          # f → [sr_wins, pr_wins]
+    for feats, rec in best_by_key.items():
+        wins[feats[2]][0 if rec.schedule == "SR" else 1] += 1
+    fs = sorted(wins)
+    total = sum(sum(v) for v in wins.values())
+    # candidate thresholds: SR iff log2_feat >= t
+    candidates = [float("-inf")] + [f + 1e-9 for f in fs] + [float("inf")]
+    best_thr, best_acc = float("inf"), -1.0
+    for t in candidates:
+        acc = sum((v[0] if f >= t else v[1])
+                  for f, v in wins.items()) / max(total, 1)
+        if acc > best_acc:
+            best_thr, best_acc = t, acc
+    if best_thr == float("inf"):
+        return "False", best_thr                 # PR everywhere (TPU finding)
+    if best_thr == float("-inf"):
+        return "True", best_thr
+    return f"log2_feat >= {float(best_thr)!r}", float(best_thr)
+
+
+def train(out_path: pathlib.Path | None = None, augment_factor: int = 60,
+          max_depth: int = 5, verbose: bool = True):
+    records = perfdb.build_perfdb(augment_factor=augment_factor)
+    if verbose:
+        print(f"perfdb: {len(records)} measurements over "
+              f"{len({r.features for r in records})} keys", file=sys.stderr)
+
+    trees = {}
+    for sched in ("SR", "PR"):
+        x, y = perfdb.top1_training_set(records, sched)
+        tree = MultiOutputDecisionTree(max_depth=max_depth,
+                                       min_samples_leaf=8).fit(x, y)
+        trees[sched] = tree
+        if verbose:
+            print(f"{sched}: {x.shape[0]} keys, depth={tree.depth()}, "
+                  f"leaves={tree.num_leaves()}", file=sys.stderr)
+
+    rule, thr = fit_schedule_rule(records)
+    src = codegen.generate_rules_source(trees["SR"], trees["PR"],
+                                        InputFeatures.names(),
+                                        schedule_rule=rule)
+    if out_path is None:
+        out_path = pathlib.Path(__file__).parent / "_generated_rules.py"
+    out_path.write_text(src)
+    if verbose:
+        print(f"wrote {out_path} (schedule rule: {rule})", file=sys.stderr)
+    return trees, records
+
+
+if __name__ == "__main__":
+    train()

@@ -1,0 +1,148 @@
+"""Fault tolerance for the training loop (DESIGN.md §6).
+
+Pieces (all host-side, framework-agnostic, unit-tested):
+  StragglerMonitor   — rolling step-time stats; flags steps > factor × p50
+                       and recommends action after repeated offences.
+  StepWatchdog       — hard wall-clock deadline per step (a hung collective
+                       on a dead node looks like an infinite step).
+  ResilientLoop      — runs steps, checkpoints every K, and on failure
+                       restores the latest complete checkpoint and replays.
+                       Deterministic data (seeded per step) makes replay
+                       exact. `max_restarts` bounds crash loops.
+
+On a real multi-host deployment the restore path re-enters through
+``jax.distributed.initialize`` with the surviving hosts (elastic mesh —
+checkpoint restore accepts a different mesh, see checkpoint.py); here the
+logic is exercised with injected failures (tests/test_fault_tolerance.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Any, Callable, Optional
+
+from repro.checkpoint import checkpoint as ckpt
+
+
+class StragglerMonitor:
+    def __init__(self, factor: float = 3.0, window: int = 50,
+                 tolerance: int = 3):
+        self.factor = factor
+        self.window = window
+        self.tolerance = tolerance
+        self.times: list[float] = []
+        self.offences = 0
+
+    def record(self, duration_s: float) -> dict:
+        self.times.append(duration_s)
+        if len(self.times) > self.window:
+            self.times.pop(0)
+        med = sorted(self.times)[len(self.times) // 2]
+        is_straggler = (len(self.times) >= 5
+                        and duration_s > self.factor * med)
+        self.offences = self.offences + 1 if is_straggler else 0
+        return {
+            "median_s": med,
+            "is_straggler": is_straggler,
+            # repeated stragglers ⇒ a sick node: re-shard / evict, don't wait
+            "action": ("evict" if self.offences >= self.tolerance
+                       else "warn" if is_straggler else "ok"),
+        }
+
+
+class StepTimeout(RuntimeError):
+    pass
+
+
+class StepWatchdog:
+    """Hard deadline around a blocking step call."""
+
+    def __init__(self, timeout_s: float):
+        self.timeout_s = timeout_s
+
+    def run(self, fn: Callable[[], Any]) -> Any:
+        result: list = []
+        error: list = []
+
+        def target():
+            try:
+                result.append(fn())
+            except BaseException as e:  # noqa: BLE001 — propagated below
+                error.append(e)
+
+        th = threading.Thread(target=target, daemon=True)
+        th.start()
+        th.join(self.timeout_s)
+        if th.is_alive():
+            raise StepTimeout(f"step exceeded {self.timeout_s}s deadline")
+        if error:
+            raise error[0]
+        return result[0]
+
+
+@dataclasses.dataclass
+class ResilientLoopConfig:
+    ckpt_dir: str
+    ckpt_every: int = 50
+    keep: int = 3
+    max_restarts: int = 3
+    step_timeout_s: Optional[float] = None
+    straggler_factor: float = 3.0
+
+
+class ResilientLoop:
+    """Checkpoint/restart training loop with failure replay.
+
+    step_fn(state, step:int) -> (state, metrics); state is any pytree
+    (params, opt, …).  Data must be derivable from the step index
+    (repro.data.tokens is), so replay after restore is exact."""
+
+    def __init__(self, cfg: ResilientLoopConfig, step_fn, init_state):
+        self.cfg = cfg
+        self.step_fn = step_fn
+        self.state = init_state
+        self.monitor = StragglerMonitor(cfg.straggler_factor)
+        self.restarts = 0
+        self.events: list[tuple] = []
+
+    def _restore(self):
+        latest = ckpt.latest_step(self.cfg.ckpt_dir)
+        if latest is None:
+            return 0
+        self.state = ckpt.restore(self.state, self.cfg.ckpt_dir, step=latest)
+        self.events.append(("restored", latest))
+        return latest
+
+    def run(self, num_steps: int, start_step: int = 0,
+            metrics_cb: Optional[Callable] = None):
+        step = start_step
+        watchdog = (StepWatchdog(self.cfg.step_timeout_s)
+                    if self.cfg.step_timeout_s else None)
+        while step < num_steps:
+            try:
+                t0 = time.monotonic()
+                if watchdog:
+                    self.state, metrics = watchdog.run(
+                        lambda: self.step_fn(self.state, step))
+                else:
+                    self.state, metrics = self.step_fn(self.state, step)
+                dt = time.monotonic() - t0
+                verdict = self.monitor.record(dt)
+                if verdict["action"] == "evict":
+                    self.events.append(("straggler_evict", step))
+                    self.monitor.offences = 0
+                if metrics_cb:
+                    metrics_cb(step, metrics, verdict)
+                step += 1
+                if step % self.cfg.ckpt_every == 0:
+                    ckpt.save(self.state, self.cfg.ckpt_dir, step,
+                              keep=self.cfg.keep)
+                    self.events.append(("saved", step))
+            except (StepTimeout, RuntimeError, ValueError) as e:
+                self.restarts += 1
+                self.events.append(("failure", step, repr(e)))
+                if self.restarts > self.cfg.max_restarts:
+                    raise
+                step = self._restore()
+        return self.state

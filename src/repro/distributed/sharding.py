@@ -1,0 +1,166 @@
+"""Logical-axis → mesh-axis sharding rules (DP/FSDP/TP/EP/SP).
+
+Parameters carry logical axes (repro.models.params.P); these rules translate
+them to ``PartitionSpec``s on the production mesh:
+
+  mesh axes: ("data", "model")              — single pod (16 × 16)
+             ("pod", "data", "model")       — multi-pod (2 × 16 × 16)
+
+  TP   : "mlp"/"heads"/"kv"/"vocab"/"expert" → "model"
+  FSDP : "embed" (param hidden dim)          → ("pod","data")  [ZeRO-3]
+  DP   : activation "batch"                  → ("pod","data")
+  SP   : activation "seq" (long-context)     → "model" or "data" per plan
+  EP   : "expert"                            → "model"
+
+Any rule whose dimension is not divisible by the assigned mesh axes falls
+back to replication (guarded in ``spec_for_axes``) — e.g. whisper-tiny's
+6 q-heads on a 16-way model axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from repro.models.params import P, is_param
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelPlan:
+    fsdp: bool = True                  # shard "embed" over data (ZeRO-3)
+    seq_shard_axis: Optional[str] = None   # SP: shard activation "seq"
+    batch_axes: Tuple[str, ...] = ("data",)
+    model_axes: Tuple[str, ...] = ("model",)
+
+    @staticmethod
+    def for_mesh(mesh: Mesh, fsdp: bool = True,
+                 seq_shard_axis: Optional[str] = None) -> "ParallelPlan":
+        batch = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        return ParallelPlan(fsdp=fsdp, seq_shard_axis=seq_shard_axis,
+                            batch_axes=batch, model_axes=("model",))
+
+
+def _rules(plan: ParallelPlan):
+    data = plan.batch_axes
+    return {
+        # parameter logical axes
+        "embed": data if plan.fsdp else None,
+        "mlp": plan.model_axes,
+        "heads": plan.model_axes,
+        "kv": plan.model_axes,
+        "vocab": plan.model_axes,
+        "expert": plan.model_axes,
+        "layers": None,
+        "embed2": None,
+        # activation logical axes
+        "batch": data,
+        "seq": (plan.seq_shard_axis,) if plan.seq_shard_axis else None,
+        "capacity": data,
+        "act_vocab": plan.model_axes,
+        "act_heads": plan.model_axes,
+        None: None,
+    }
+
+
+def spec_for_axes(axes, shape, plan: ParallelPlan, mesh: Mesh) -> PartitionSpec:
+    """PartitionSpec for one tensor.
+
+    Guards: (a) divisibility — dims not divisible by their mesh-axis product
+    fall back to replication (e.g. whisper's 6 heads on a 16-way model axis);
+    (b) uniqueness — a mesh axis maps to at most one dim, first axis in the
+    logical order wins (e.g. MoE expert weights (expert, embed, mlp): the
+    expert dim takes "model", so mlp stays unsharded)."""
+    rules = _rules(plan)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    used: set = set()
+    entries = []
+    for dim, name in zip(shape, axes):
+        assign = rules.get(name)
+        if assign is None:
+            entries.append(None)
+            continue
+        assign = tuple(a for a in (assign if isinstance(assign, tuple)
+                                   else (assign,))
+                       if a is not None and a not in used)
+        total = int(np.prod([sizes[a] for a in assign])) if assign else 1
+        if assign and dim % total == 0:
+            entries.append(assign if len(assign) > 1 else assign[0])
+            used.update(assign)
+        else:
+            entries.append(None)
+    return PartitionSpec(*entries)
+
+
+def effective_axes(p: P):
+    """Axes aligned to the *current* value rank: a lax.scan over stacked
+    layers slices the leading "layers" dim off the value while the aux axes
+    ride along unchanged — drop it when interpreting a sliced leaf."""
+    ax = p.axes
+    nd = getattr(p.value, "ndim", len(ax))
+    if len(ax) == nd + 1 and ax[0] == "layers":
+        return ax[1:]
+    return ax
+
+
+def param_specs(params, plan: ParallelPlan, mesh: Mesh):
+    """PartitionSpec pytree (prefix tree: one spec per P leaf)."""
+    return jax.tree_util.tree_map(
+        lambda p: spec_for_axes(p.axes, p.value.shape, plan, mesh),
+        params, is_leaf=is_param)
+
+
+def param_shardings(params, plan: ParallelPlan, mesh: Mesh):
+    return jax.tree_util.tree_map(
+        lambda p: NamedSharding(mesh, spec_for_axes(p.axes, p.value.shape,
+                                                    plan, mesh)),
+        params, is_leaf=is_param)
+
+
+# ---------------------------------------------------------------------------
+# activation constraints — a process-global context so model code can
+# annotate without threading mesh/plan through every call
+# ---------------------------------------------------------------------------
+
+_CTX: list = []
+
+
+class activation_sharding:
+    """with activation_sharding(mesh, plan): ... enables ashard()."""
+
+    def __init__(self, mesh: Mesh, plan: ParallelPlan):
+        self.mesh, self.plan = mesh, plan
+
+    def __enter__(self):
+        _CTX.append((self.mesh, self.plan))
+        return self
+
+    def __exit__(self, *exc):
+        _CTX.pop()
+
+
+def ashard(x, *axes):
+    """Constrain activation x to logical axes (no-op outside a context)."""
+    if not _CTX:
+        return x
+    mesh, plan = _CTX[-1]
+    spec = spec_for_axes(axes, x.shape, plan, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def sharding_active() -> bool:
+    return bool(_CTX)
+
+
+def current_context():
+    """(mesh, plan) of the innermost activation_sharding context, or None."""
+    return _CTX[-1] if _CTX else None
+
+
+def batch_spec(plan: ParallelPlan, mesh: Mesh, *, seq_sharded: bool = False):
+    """Sharding for a (B, S) token batch."""
+    b = plan.batch_axes if len(plan.batch_axes) > 1 else plan.batch_axes[0]
+    s = plan.seq_shard_axis if seq_sharded else None
+    return PartitionSpec(b, s)

@@ -1,0 +1,201 @@
+"""Jit'd distributed train/serve step builders (pjit path).
+
+``build_train_step`` / ``build_serve_step`` return (fn, in_shardings,
+out_shardings) ready for ``jax.jit(..., in_shardings=...)`` — the dry-run
+lowers exactly these.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from repro.distributed import sharding as shd
+from repro.models import lm, rwkv as rwkv_lib, ssm as ssm_lib
+from repro.models.config import ModelConfig
+from repro.models.params import is_param
+from repro.optim import adamw, schedule
+from repro.optim.adamw import QTensor
+
+
+class TrainStepConfig(NamedTuple):
+    opt: adamw.AdamWConfig = adamw.AdamWConfig()
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    remat_policy: str = "full"
+    moe_impl: str = "capacity"
+
+
+# ---------------------------------------------------------------------------
+# shardings for optimizer state (mirrors params; QTensor scale replicated)
+# ---------------------------------------------------------------------------
+
+def opt_shardings(params, plan, mesh: Mesh, opt_state):
+    """Moment shardings mirror the param shardings. int8 (QTensor) moments
+    shard the payload like the param and replicate the scalar scale; the
+    prefix tree must keep the P-node structure so QTensor fields match."""
+    psh = shd.param_shardings(params, plan, mesh)
+    rep = NamedSharding(mesh, PartitionSpec())
+    from repro.models.params import P
+
+    def moment_sh(sh, leaf):
+        inner = leaf.value if is_param(leaf) else leaf
+        if isinstance(inner, QTensor):
+            return P(QTensor(sh, rep), leaf.axes) if is_param(leaf) \
+                else QTensor(sh, rep)
+        return sh
+
+    is_leaf = lambda x: isinstance(x, NamedSharding)
+    mu = jax.tree_util.tree_map(moment_sh, psh, opt_state.mu, is_leaf=is_leaf)
+    nu = jax.tree_util.tree_map(moment_sh, psh, opt_state.nu, is_leaf=is_leaf)
+    return adamw.AdamWState(rep, mu, nu)
+
+
+# ---------------------------------------------------------------------------
+# train step
+# ---------------------------------------------------------------------------
+
+def build_train_step(cfg: ModelConfig, mesh: Mesh, plan: shd.ParallelPlan,
+                     ts: TrainStepConfig = TrainStepConfig(),
+                     batch_fields=("tokens", "labels"),
+                     extra_batch_specs: Optional[dict] = None):
+    """Returns (train_step, in_shardings, out_shardings, donate)."""
+
+    def train_step(params, opt_state, batch, step):
+        with shd.activation_sharding(mesh, plan):
+            def loss(p):
+                return lm.loss_fn(p, cfg, batch,
+                                  remat_policy=ts.remat_policy,
+                                  moe_impl=ts.moe_impl)
+            (l, metrics), grads = jax.value_and_grad(loss, has_aux=True)(params)
+            lr_scale = schedule.warmup_cosine(step, ts.warmup_steps,
+                                              ts.total_steps)
+            new_params, new_opt, om = adamw.update(grads, opt_state, params,
+                                                   ts.opt, lr_scale=lr_scale)
+        metrics = dict(metrics, loss=l, **om)
+        return new_params, new_opt, metrics
+
+    def shardings_for(params, opt_state, batch_shapes: dict):
+        """batch_shapes: field → concrete shape (divisibility-aware specs)."""
+        psh = shd.param_shardings(params, plan, mesh)
+        osh = opt_shardings(params, plan, mesh, opt_state)
+        bsh = {}
+        for f, shape in batch_shapes.items():
+            axes = ("batch", "seq") + (None,) * (len(shape) - 2)
+            bsh[f] = NamedSharding(mesh,
+                                   shd.spec_for_axes(axes, shape, plan, mesh))
+        if extra_batch_specs:
+            bsh.update({k: NamedSharding(mesh, v)
+                        for k, v in extra_batch_specs.items()})
+        rep = NamedSharding(mesh, PartitionSpec())
+        in_sh = (psh, osh, bsh, rep)
+        out_sh = (psh, osh, None)
+        return in_sh, out_sh
+
+    return train_step, shardings_for
+
+
+# ---------------------------------------------------------------------------
+# serve (decode) step
+# ---------------------------------------------------------------------------
+
+def decode_state_specs(cfg: ModelConfig, mesh: Mesh, plan: shd.ParallelPlan,
+                       batch: int, max_len: int):
+    """PartitionSpec tree mirroring lm.init_decode_state's structure."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    model = plan.model_axes[0]
+    msize = sizes[model]
+    dsize = 1
+    for a in plan.batch_axes:
+        dsize *= sizes[a]
+    baxes = plan.batch_axes if len(plan.batch_axes) > 1 else plan.batch_axes[0]
+    b_ok = batch % dsize == 0
+
+    def kv_spec():
+        kh = cfg.num_kv_heads
+        kh_s = model if kh % msize == 0 else None
+        seq_s = None
+        if kh_s is None and max_len % msize == 0:
+            # GQA with few KV heads: shard the cache over *sequence* on the
+            # model axis (flash-decode style) — scores/softmax shard over S
+            # with only scalar-sized cross-shard reductions. 6.4× fewer
+            # decode collectives than head_dim sharding, which forced GSPMD
+            # into involuntary cache rematerialisation (§Perf log #8).
+            seq_s = model
+        elif not b_ok and max_len % dsize == 0:
+            seq_s = baxes          # long-context: shard cache sequence (SP)
+        p = PartitionSpec(None, baxes if b_ok else None, seq_s, kh_s, None)
+        return (p, p)
+
+    def ssm_spec():
+        di = cfg.expand * cfg.d_model
+        di_s = model if di % msize == 0 else None
+        return ssm_lib.SSMState(
+            PartitionSpec(None, baxes if b_ok else None, None, di_s),
+            PartitionSpec(None, baxes if b_ok else None, di_s, None))
+
+    def rwkv_spec():
+        h_s = model if cfg.num_heads % msize == 0 else None
+        d_s = model if cfg.d_model % msize == 0 else None
+        return rwkv_lib.RWKVState(
+            PartitionSpec(None, baxes if b_ok else None, h_s, None, None),
+            PartitionSpec(None, baxes if b_ok else None, d_s),
+            PartitionSpec(None, baxes if b_ok else None, d_s))
+
+    def mk(kind):
+        return {"attn": kv_spec, "mamba": ssm_spec, "rwkv": rwkv_spec}[kind[0]]()
+
+    lead_kinds, period_kinds, _ = stack_plan_cached(cfg)
+    lead = tuple(jax.tree_util.tree_map(lambda s: PartitionSpec(*s[1:]), mk(k),
+                                        is_leaf=lambda x: isinstance(x, PartitionSpec))
+                 for k in lead_kinds)
+    period = tuple(mk(k) for k in period_kinds)
+    return lm.DecodeState(lead, period, PartitionSpec())
+
+
+@functools.lru_cache(maxsize=64)
+def stack_plan_cached(cfg):
+    return lm.stack_plan(cfg)
+
+
+def build_serve_step(cfg: ModelConfig, mesh: Mesh, plan: shd.ParallelPlan,
+                     batch: int, max_len: int, moe_impl: str = "capacity"):
+    """Single-token decode step. Returns (serve_step, in_shardings)."""
+
+    def serve_step(params, tokens, state):
+        with shd.activation_sharding(mesh, plan):
+            logits, new_state = lm.decode_step(params, cfg, tokens, state,
+                                               moe_impl=moe_impl)
+        return logits, new_state
+
+    def shardings_for(params):
+        psh = shd.param_shardings(params, plan, mesh)
+        tok_sh = NamedSharding(mesh, shd.spec_for_axes(
+            ("batch", None), (batch, 1), plan, mesh))
+        st_spec = decode_state_specs(cfg, mesh, plan, batch, max_len)
+        st_sh = jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh, s), st_spec,
+            is_leaf=lambda x: isinstance(x, PartitionSpec))
+        return (psh, tok_sh, st_sh)
+
+    return serve_step, shardings_for
+
+
+def build_prefill_step(cfg: ModelConfig, mesh: Mesh, plan: shd.ParallelPlan,
+                       moe_impl: str = "capacity",
+                       remat_policy: str = "none"):
+    """Full-sequence forward (inference prefill — logits only)."""
+
+    def prefill(params, batch):
+        with shd.activation_sharding(mesh, plan):
+            logits, _ = lm.forward(params, cfg, batch["tokens"],
+                                   prefix_embeds=batch.get("prefix_embeds"),
+                                   enc_embeds=batch.get("enc_embeds"),
+                                   remat_policy=remat_policy,
+                                   moe_impl=moe_impl)
+        return logits
+
+    return prefill

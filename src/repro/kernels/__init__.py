@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for GeoT's compute hot-spots (paper §III/§IV).
+
+segment_reduce          — SR (VPU walk) + PR (MXU one-hot) schedules
+gather_segment_reduce   — fused message+aggregate (format-agnostic SpMM)
+segment_matmul          — grouped GEMM over segments (MoE expert FFN)
+
+Validate vs. :mod:`repro.kernels.ref` oracles; interpret=True on CPU.
+"""

@@ -1,0 +1,236 @@
+"""Fused message+aggregate Pallas kernel (paper §IV, Listing 2):
+
+    index_segment_reduce        :  Y[s]  = Σ_{i: seg[i]==s}  H[gidx[i]]
+    index_weight_segment_reduce :  Y[s]  = Σ_{i: seg[i]==s}  w[i]·H[gidx[i]]  (≡ SpMM)
+
+The (|E|, N) message tensor never exists in HBM: each chunk's H rows are
+gathered straight into a VMEM staging buffer by per-row async DMA (the TPU
+analogue of the fused gather — H stays unblocked in HBM/ANY memory), then the
+same PR (MXU one-hot) / SR (VPU walk) reduction as
+:mod:`repro.kernels.segment_reduce` consumes the staged tile.
+
+Roofline note: per-row DMA granularity is N_b·dtype bytes; below 512 B the
+gather runs below peak HBM bandwidth (modelled in
+``repro.core.costmodel.spmm_cost`` and visible in §Roofline).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.config_space import KernelConfig
+from repro.kernels.segment_reduce import _round_up, chunk_metadata
+
+
+def _gather_chunk(gidx_ref, h_ref, xbuf_ref, sem, j: jax.Array, n_b: int):
+    """DMA-gather the chunk's H rows (column tile j) into VMEM staging.
+
+    Software-pipelined: row i+1's copy is issued before waiting on row i,
+    so each DMA's latency hides behind the next one's issue (the per-row
+    granularity penalty below 512 B remains — modelled in
+    costmodel.spmm_cost and visible in §Roofline)."""
+    m_b = gidx_ref.shape[1]
+
+    def start(i):
+        g = gidx_ref[0, i]
+        cp = pltpu.make_async_copy(
+            h_ref.at[pl.ds(g, 1), pl.ds(j * n_b, n_b)],
+            xbuf_ref.at[pl.ds(i, 1), :],
+            sem,
+        )
+        cp.start()
+        return cp
+
+    first = start(0)
+
+    def copy_row(i, prev_started):
+        # issue row i+1 while row i is in flight, then retire row i
+        @pl.when(i + 1 < m_b)
+        def _():
+            start(i + 1)
+        g = gidx_ref[0, i]
+        pltpu.make_async_copy(
+            h_ref.at[pl.ds(g, 1), pl.ds(j * n_b, n_b)],
+            xbuf_ref.at[pl.ds(i, 1), :],
+            sem,
+        ).wait()
+        return prev_started
+
+    jax.lax.fori_loop(0, m_b, copy_row, 0, unroll=False)
+
+
+def _pr_body(cf_ref, cc_ref, gidx_ref, idx_ref, w_ref, h_ref, o_ref,
+             xbuf_ref, sem, *, s_b: int, n_b: int, has_weight: bool):
+    b, j, k = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    @pl.when(k < cc_ref[b])
+    def _compute():
+        _gather_chunk(gidx_ref, h_ref, xbuf_ref, sem, j, n_b)
+        xg = xbuf_ref[...]
+        if has_weight:
+            xg = xg * w_ref[0, :][:, None].astype(xg.dtype)
+        seg = idx_ref[0, :]
+        m_b = seg.shape[0]
+        rel = seg - b * s_b
+        cols = jax.lax.broadcasted_iota(jnp.int32, (m_b, s_b), 1)
+        onehot = (rel[:, None] == cols).astype(xg.dtype)
+        o_ref[...] += jax.lax.dot_general(
+            onehot, xg, dimension_numbers=(((0,), (0,)), ((), ())),
+            preferred_element_type=o_ref.dtype).astype(o_ref.dtype)
+
+
+def _sr_body(cf_ref, cc_ref, gidx_ref, idx_ref, w_ref, h_ref, o_ref,
+             xbuf_ref, sem, acc_ref, st_ref, *, s_b: int, n_b: int,
+             has_weight: bool):
+    b, j, k = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        st_ref[0] = -1
+
+    @pl.when(k < cc_ref[b])
+    def _compute():
+        _gather_chunk(gidx_ref, h_ref, xbuf_ref, sem, j, n_b)
+        seg = idx_ref[0, :]
+        m_b = seg.shape[0]
+
+        def flush():
+            p = st_ref[0]
+            o_ref[pl.ds(p, 1), :] += acc_ref[...]
+
+        def walk(i, _):
+            r = seg[i] - b * s_b
+            in_win = jnp.logical_and(r >= 0, r < s_b)
+            opened = st_ref[0] >= 0
+
+            @pl.when(jnp.logical_and(opened,
+                                     jnp.logical_or(~in_win, r != st_ref[0])))
+            def _():
+                flush()
+                st_ref[0] = -1
+
+            xrow = xbuf_ref[pl.ds(i, 1), :].astype(acc_ref.dtype)
+            if has_weight:
+                xrow = xrow * w_ref[0, i].astype(acc_ref.dtype)
+
+            @pl.when(jnp.logical_and(in_win, st_ref[0] == r))
+            def _():
+                acc_ref[...] += xrow
+
+            @pl.when(jnp.logical_and(in_win, st_ref[0] != r))
+            def _():
+                acc_ref[...] = xrow
+                st_ref[0] = r
+
+            return 0
+
+        jax.lax.fori_loop(0, m_b, walk, 0, unroll=False)
+
+        @pl.when(jnp.logical_and(k == cc_ref[b] - 1, st_ref[0] >= 0))
+        def _():
+            flush()
+            st_ref[0] = -1
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_segments", "config", "max_chunks", "interpret",
+                     "has_weight"),
+)
+def _gather_segment_reduce_impl(h, gather_idx, seg_idx, weight,
+                                num_segments: int, config: KernelConfig,
+                                max_chunks: Optional[int], interpret: bool,
+                                has_weight: bool):
+    m = gather_idx.shape[0]
+    v, n = h.shape
+    s_b, n_b, m_b = config.s_b, config.n_b, config.m_b
+    n_b = min(n_b, _round_up(max(n, 1), 128))
+    m_pad = _round_up(max(m, 1), m_b)
+    n_pad = _round_up(max(n, 1), n_b)
+    s_pad = _round_up(num_segments, s_b)
+
+    hp = jnp.pad(h, ((0, 1), (0, n_pad - n)))        # +1 guard row for padding
+    gidxp = jnp.pad(gather_idx.astype(jnp.int32), (0, m_pad - m),
+                    constant_values=v)               # padding gathers guard row
+    idxp = jnp.pad(seg_idx.astype(jnp.int32), (0, m_pad - m),
+                   constant_values=num_segments)
+    wp = jnp.pad(weight.astype(jnp.float32), (0, m_pad - m))
+    gidx2d = gidxp.reshape(m_pad // m_b, m_b)
+    idx2d = idxp.reshape(m_pad // m_b, m_b)
+    w2d = wp.reshape(m_pad // m_b, m_b)
+
+    chunk_first, chunk_count = chunk_metadata(idxp, num_segments, s_b, m_b,
+                                              m_pad)
+    out_blocks = s_pad // s_b
+    n_tiles = n_pad // n_b
+    if max_chunks is None:
+        max_chunks = m_pad // m_b
+
+    def row_map(b, j, k, cf, cc):
+        return (cf[b] + jnp.minimum(k, jnp.maximum(cc[b] - 1, 0)), 0)
+
+    def o_map(b, j, k, cf, cc):
+        return (b, j)
+
+    common = dict(
+        grid=(out_blocks, n_tiles, max_chunks),
+        in_specs=[
+            pl.BlockSpec((1, m_b), row_map),                  # gather_idx
+            pl.BlockSpec((1, m_b), row_map),                  # seg_idx
+            pl.BlockSpec((1, m_b), row_map),                  # weight
+            pl.BlockSpec(memory_space=pltpu.ANY),             # H (unblocked)
+        ],
+        out_specs=pl.BlockSpec((s_b, n_b), o_map),
+    )
+    scratch = [pltpu.VMEM((m_b, n_b), h.dtype), pltpu.SemaphoreType.DMA]
+
+    if config.schedule == "PR":
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2, **common, scratch_shapes=scratch)
+        body = functools.partial(_pr_body, s_b=s_b, n_b=n_b,
+                                 has_weight=has_weight)
+    else:
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2, **common,
+            scratch_shapes=scratch + [pltpu.VMEM((1, n_b), jnp.float32),
+                                      pltpu.SMEM((1,), jnp.int32)])
+        body = functools.partial(_sr_body, s_b=s_b, n_b=n_b,
+                                 has_weight=has_weight)
+
+    out = pl.pallas_call(
+        body,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((s_pad, n_pad), jnp.float32),
+        interpret=interpret,
+    )(chunk_first, chunk_count, gidx2d, idx2d, w2d, hp)
+
+    return out[:num_segments, :n].astype(h.dtype)
+
+
+def gather_segment_reduce_pallas(h, gather_idx, seg_idx, num_segments: int,
+                                 weight=None,
+                                 config: Optional[KernelConfig] = None,
+                                 max_chunks: Optional[int] = None,
+                                 interpret: bool = False):
+    """Fused Y[s] = Σ_{seg[i]==s} (w[i]·) H[gather_idx[i]]  — format-agnostic
+    SpMM.  seg_idx must be sorted non-decreasing."""
+    if config is None:
+        from repro.core.heuristics import select_config
+        config = select_config(int(gather_idx.shape[0]), num_segments,
+                               int(h.shape[1]))
+    has_weight = weight is not None
+    if weight is None:
+        weight = jnp.ones((gather_idx.shape[0],), jnp.float32)
+    return _gather_segment_reduce_impl(h, gather_idx, seg_idx, weight,
+                                       num_segments, config, max_chunks,
+                                       interpret, has_weight)

@@ -1,0 +1,69 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On this CPU-only container the kernels execute with ``interpret=True``
+(Pallas interpreter); on TPU hardware set ``REPRO_PALLAS_INTERPRET=0`` (or
+pass ``interpret=False``) to compile via Mosaic. Config selection defaults to
+the data-aware generated rules (paper §III-C).
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+
+from repro.core.config_space import KernelConfig
+from repro.kernels.gather_segment_reduce import gather_segment_reduce_pallas
+from repro.kernels.segment_matmul import segment_matmul_pallas
+from repro.kernels.segment_reduce import segment_reduce_pallas
+
+
+def _default_interpret() -> bool:
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"
+
+
+def segment_reduce(x, idx, num_segments: int, reduce: str = "sum",
+                   config: Optional[KernelConfig] = None,
+                   max_chunks: Optional[int] = None,
+                   interpret: Optional[bool] = None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return segment_reduce_pallas(x, idx, num_segments, reduce=reduce,
+                                 config=config, max_chunks=max_chunks,
+                                 interpret=interpret)
+
+
+def gather_segment_reduce(h, gather_idx, seg_idx, num_segments: int,
+                          weight=None, reduce: str = "sum",
+                          config: Optional[KernelConfig] = None,
+                          max_chunks: Optional[int] = None,
+                          interpret: Optional[bool] = None):
+    if reduce != "sum":
+        raise NotImplementedError("fused gather supports sum (paper §IV)")
+    interpret = _default_interpret() if interpret is None else interpret
+    return gather_segment_reduce_pallas(h, gather_idx, seg_idx, num_segments,
+                                        weight=weight, config=config,
+                                        max_chunks=max_chunks,
+                                        interpret=interpret)
+
+
+def segment_matmul(x, group_sizes, w, config: Optional[KernelConfig] = None,
+                   max_groups: Optional[int] = None,
+                   interpret: Optional[bool] = None):
+    interpret = _default_interpret() if interpret is None else interpret
+    m_b = config.m_b if config is not None else 128
+    n_b = config.n_b if config is not None else 128
+    return segment_matmul_pallas(x, group_sizes, w, m_b=m_b, n_b=n_b,
+                                 max_groups=max_groups, interpret=interpret)
+
+
+def sddmm(a, b, row_idx, col_idx, config: Optional[KernelConfig] = None,
+          interpret: Optional[bool] = None):
+    from repro.kernels.sddmm import sddmm_pallas
+    interpret = _default_interpret() if interpret is None else interpret
+    m_b = config.m_b if config is not None else 256
+    n_b = config.n_b if config is not None else 512
+    return sddmm_pallas(a, b, row_idx, col_idx, m_b=m_b, n_b=n_b,
+                        interpret=interpret)

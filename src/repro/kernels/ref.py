@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets).
+
+These are *semantic* references (XLA scatter/gather based) — independent of
+the blocked algorithm in :mod:`repro.core.ops`, so kernel tests validate
+against a formulation that shares no code with the kernels.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_reduce(x, idx, num_segments: int, reduce: str = "sum"):
+    f = {"sum": jax.ops.segment_sum, "max": jax.ops.segment_max}.get(reduce)
+    if f is not None:
+        return f(x, idx, num_segments, indices_are_sorted=True)
+    if reduce == "mean":
+        s = jax.ops.segment_sum(x, idx, num_segments, indices_are_sorted=True)
+        c = jax.ops.segment_sum(jnp.ones((x.shape[0],), jnp.float32), idx,
+                                num_segments, indices_are_sorted=True)
+        return (s / jnp.maximum(c, 1.0)[:, None]).astype(x.dtype)
+    raise ValueError(reduce)
+
+
+def gather_segment_reduce(h, gather_idx, seg_idx, num_segments: int,
+                          weight=None, reduce: str = "sum"):
+    msg = jnp.take(h, gather_idx, axis=0)
+    if weight is not None:
+        msg = msg * weight[:, None].astype(msg.dtype)
+    return segment_reduce(msg, seg_idx, num_segments, reduce)
+
+
+def segment_matmul(x, group_sizes, w):
+    """Grouped GEMM oracle: masked per-group matmuls (O(E·M·K·N), test-scale
+    only — deliberately naive and independent of lax.ragged_dot)."""
+    m = x.shape[0]
+    e = w.shape[0]
+    offsets = jnp.concatenate([jnp.zeros((1,), group_sizes.dtype),
+                               jnp.cumsum(group_sizes)])
+    rows = jnp.arange(m)
+    out = jnp.zeros((m, w.shape[-1]), jnp.promote_types(x.dtype, w.dtype))
+    for g in range(e):
+        mask = ((rows >= offsets[g]) & (rows < offsets[g + 1]))[:, None]
+        out = out + jnp.where(mask, x @ w[g], 0.0)
+    return out.astype(x.dtype)

@@ -1,0 +1,96 @@
+"""SDDMM Pallas kernel — sampled dense-dense matmul (paper §VI).
+
+    out[i] = < A[row_idx[i], :] , B[col_idx[i], :] >      i ∈ [0, M)
+
+SDDMM is the backward of the fused SpMM (`index_weight_segment_reduce`'s
+dW) — the op the paper names as the missing piece for training support.
+TPU mapping: grid over edge chunks; both operand rows are DMA-gathered into
+VMEM staging buffers (same per-row async-copy machinery as
+gather_segment_reduce), then the per-edge dot is an elementwise multiply +
+lane reduction on the VPU. No sortedness required (pure gather, no scatter).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.segment_reduce import _round_up
+
+
+def _body(ridx_ref, cidx_ref, a_ref, b_ref, o_ref, abuf_ref, bbuf_ref, sem,
+          *, n_tiles: int):
+    m_b = ridx_ref.shape[1]
+    j = pl.program_id(1)
+
+    def copy_row(i, _):
+        r = ridx_ref[0, i]
+        c = cidx_ref[0, i]
+        n_b = abuf_ref.shape[1]
+        cp = pltpu.make_async_copy(
+            a_ref.at[pl.ds(r, 1), pl.ds(j * n_b, n_b)],
+            abuf_ref.at[pl.ds(i, 1), :], sem)
+        cp.start()
+        cp.wait()
+        cp = pltpu.make_async_copy(
+            b_ref.at[pl.ds(c, 1), pl.ds(j * n_b, n_b)],
+            bbuf_ref.at[pl.ds(i, 1), :], sem)
+        cp.start()
+        cp.wait()
+        return 0
+
+    jax.lax.fori_loop(0, m_b, copy_row, 0, unroll=False)
+    partial = jnp.sum(
+        abuf_ref[...].astype(jnp.float32) * bbuf_ref[...].astype(jnp.float32),
+        axis=1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[0, :] += partial      # accumulate feature tiles (j sequential)
+
+
+@functools.partial(jax.jit, static_argnames=("m_b", "n_b", "interpret"))
+def sddmm_pallas(a, b, row_idx, col_idx, m_b: int = 256, n_b: int = 512,
+                 interpret: bool = False):
+    """a: (Ra, N); b: (Rb, N); row/col_idx: (M,) int32 → (M,) f32."""
+    m = row_idx.shape[0]
+    n = a.shape[1]
+    n_b = min(n_b, _round_up(max(n, 1), 128))
+    m_pad = _round_up(max(m, 1), m_b)
+    n_pad = _round_up(max(n, 1), n_b)
+
+    ap = jnp.pad(a, ((0, 1), (0, n_pad - n)))     # +1 guard row
+    bp = jnp.pad(b, ((0, 1), (0, n_pad - n)))
+    ridx = jnp.pad(row_idx.astype(jnp.int32), (0, m_pad - m),
+                   constant_values=a.shape[0]).reshape(m_pad // m_b, m_b)
+    cidx = jnp.pad(col_idx.astype(jnp.int32), (0, m_pad - m),
+                   constant_values=b.shape[0]).reshape(m_pad // m_b, m_b)
+    n_tiles = n_pad // n_b
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=0,
+        grid=(m_pad // m_b, n_tiles),
+        in_specs=[
+            pl.BlockSpec((1, m_b), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, m_b), lambda i, j: (i, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_specs=pl.BlockSpec((1, m_b), lambda i, j: (i, 0)),
+        scratch_shapes=[pltpu.VMEM((m_b, n_b), a.dtype),
+                        pltpu.VMEM((m_b, n_b), b.dtype),
+                        pltpu.SemaphoreType.DMA],
+    )
+    out = pl.pallas_call(
+        functools.partial(_body, n_tiles=n_tiles),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m_pad // m_b, m_b), jnp.float32),
+        interpret=interpret,
+    )(ridx, cidx, ap, bp)
+    return out.reshape(m_pad)[:m]

@@ -1,0 +1,248 @@
+"""Pallas TPU segment-reduction kernel (paper §III adapted to TPU).
+
+Schedules (DESIGN.md §2):
+  PR — "parallel reduction": per chunk, a one-hot matrix P (M_b × S_b) is
+       built on the VPU and `out += Pᵀ @ X` runs on the MXU. The systolic
+       array performs the cross-row reduction that warp shuffles perform on
+       GPU; rows whose segment falls outside the output window produce
+       all-zero P rows (the analogue of shuffle invalidation).
+  SR — "sequential reduction": a scalar walk down the chunk with a (1, N_b)
+       vector accumulator, flushing to the output block row at each segment
+       boundary (dynamic-slice store). Sequential in M, vectorized in N.
+
+Grid & tiling:
+  grid = (out_blocks, n_tiles, max_chunks)   — chunk dim innermost.
+  Each output block b owns segment ids [b·S_b, (b+1)·S_b). Because Idx is
+  sorted, the input rows feeding block b form a contiguous range; the
+  scalar-prefetched metadata (chunk_first, chunk_count) maps b to its chunk
+  range. Chunks shared with a neighbouring block are re-read by both; the
+  one-hot / window test masks out the foreign rows, so no atomics are needed
+  (TPU grid steps are sequential — the structural replacement for
+  atomicAdd, see DESIGN.md §2).
+
+No shared-memory-style staging between "thread groups" is used, matching the
+paper's design decision (§III-A).
+
+Note on K_c (the G_t analogue): it parameterises the MXU contraction depth
+per one-hot sub-matmul in the *cost model* (pipeline-fill efficiency,
+repro.core.costmodel). Mosaic schedules the systolic pipeline internally, so
+the kernel body issues the full-chunk dot and K_c is a model-level knob; on
+GPU G_t is a launch parameter, on TPU its twin lives in the scheduler.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.config_space import KernelConfig
+
+
+# ---------------------------------------------------------------------------
+# metadata (jit-safe; only `max_chunks` must be static)
+# ---------------------------------------------------------------------------
+
+def chunk_metadata(idx, num_segments: int, s_b: int, m_b: int, m_pad: int):
+    """Per-output-block chunk range over the padded row space.
+
+    Returns (chunk_first, chunk_count) of shape (out_blocks,): block b reads
+    input-row blocks [chunk_first[b], chunk_first[b] + chunk_count[b])."""
+    out_blocks = (num_segments + s_b - 1) // s_b
+    bounds = jnp.arange(out_blocks + 1, dtype=jnp.int32) * s_b
+    # row range [lo_b, hi_b) of segment ids < bound — sorted Idx ⇒ searchsorted
+    row_bound = jnp.searchsorted(idx, bounds, side="left").astype(jnp.int32)
+    lo, hi = row_bound[:-1], row_bound[1:]
+    chunk_first = lo // m_b
+    last = jnp.maximum(hi - 1, lo) // m_b
+    chunk_count = jnp.where(hi > lo, last - chunk_first + 1, 0).astype(jnp.int32)
+    return chunk_first, chunk_count
+
+
+# ---------------------------------------------------------------------------
+# kernel bodies
+# ---------------------------------------------------------------------------
+
+def _pr_body(cf_ref, cc_ref, idx_ref, x_ref, o_ref, *, s_b: int, acc_dtype):
+    b, j, k = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    @pl.when(k < cc_ref[b])
+    def _compute():
+        seg = idx_ref[0, :]                          # (m_b,) int32
+        rel = seg - b * s_b
+        m_b = seg.shape[0]
+        cols = jax.lax.broadcasted_iota(jnp.int32, (m_b, s_b), 1)
+        onehot = (rel[:, None] == cols).astype(x_ref.dtype)
+        o_ref[...] += jax.lax.dot_general(
+            onehot, x_ref[...],
+            dimension_numbers=(((0,), (0,)), ((), ())),   # contract rows
+            preferred_element_type=acc_dtype,
+        ).astype(o_ref.dtype)
+
+
+def _sr_body(cf_ref, cc_ref, idx_ref, x_ref, o_ref, acc_ref, st_ref,
+             *, s_b: int, reduce: str):
+    b, j, k = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    # max identity is -inf, matching jax.ops.segment_max on empty segments
+    init_val = -jnp.inf if reduce == "max" else 0.0
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.full_like(o_ref, init_val)
+        st_ref[0] = -1                                # open-segment rel (-1 ⇒ closed)
+
+    @pl.when(k < cc_ref[b])
+    def _compute():
+        seg = idx_ref[0, :]
+        m_b = seg.shape[0]
+
+        def flush():
+            p = st_ref[0]
+            row = o_ref[pl.ds(p, 1), :]
+            if reduce == "max":
+                o_ref[pl.ds(p, 1), :] = jnp.maximum(row, acc_ref[...])
+            else:
+                o_ref[pl.ds(p, 1), :] = row + acc_ref[...]
+
+        def walk(i, _):
+            r = seg[i] - b * s_b
+            in_win = jnp.logical_and(r >= 0, r < s_b)
+            opened = st_ref[0] >= 0
+
+            # segment boundary (or leaving the window) ⇒ flush accumulator
+            @pl.when(jnp.logical_and(opened, jnp.logical_or(~in_win, r != st_ref[0])))
+            def _():
+                flush()
+                st_ref[0] = -1
+
+            xrow = x_ref[pl.ds(i, 1), :].astype(acc_ref.dtype)
+
+            @pl.when(jnp.logical_and(in_win, st_ref[0] == r))
+            def _():  # continue open segment
+                if reduce == "max":
+                    acc_ref[...] = jnp.maximum(acc_ref[...], xrow)
+                else:
+                    acc_ref[...] += xrow
+
+            @pl.when(jnp.logical_and(in_win, st_ref[0] != r))
+            def _():  # open a new segment
+                acc_ref[...] = xrow
+                st_ref[0] = r
+
+            return 0
+
+        jax.lax.fori_loop(0, m_b, walk, 0, unroll=False)
+
+        # end of this block's chunk range ⇒ flush the trailing open segment
+        @pl.when(jnp.logical_and(k == cc_ref[b] - 1, st_ref[0] >= 0))
+        def _():
+            flush()
+            st_ref[0] = -1
+
+
+# ---------------------------------------------------------------------------
+# pallas_call wrapper
+# ---------------------------------------------------------------------------
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_segments", "reduce", "config", "max_chunks",
+                     "interpret"),
+)
+def segment_reduce_pallas(x, idx, num_segments: int, reduce: str = "sum",
+                          config: Optional[KernelConfig] = None,
+                          max_chunks: Optional[int] = None,
+                          interpret: bool = False):
+    """Blocked segment reduction via pl.pallas_call.
+
+    x: (M, N); idx: (M,) sorted int32; returns (num_segments, N) in x.dtype.
+    ``max_chunks``: static bound on chunks per output block (worst case:
+    all rows in one block). Tighten it for skewed inputs when known.
+    """
+    if config is None:
+        from repro.core.heuristics import select_config
+        config = select_config(int(x.shape[0]), num_segments, int(x.shape[1]))
+    if reduce == "max" and config.schedule == "PR":
+        config = KernelConfig("SR", config.s_b, config.n_b, config.m_b, 1)
+    if reduce == "mean":
+        s = segment_reduce_pallas(x, idx, num_segments, "sum", config,
+                                  max_chunks, interpret)
+        cnt = jax.ops.segment_sum(jnp.ones((x.shape[0],), jnp.float32), idx,
+                                  num_segments, indices_are_sorted=True)
+        return (s.astype(jnp.float32)
+                / jnp.maximum(cnt, 1.0)[:, None]).astype(x.dtype)
+
+    m, n = x.shape
+    s_b, n_b, m_b = config.s_b, config.n_b, config.m_b
+    n_b = min(n_b, _round_up(max(n, 1), 128))
+    m_pad = _round_up(max(m, 1), m_b)
+    n_pad = _round_up(max(n, 1), n_b)
+    s_pad = _round_up(num_segments, s_b)
+
+    xp = jnp.pad(x, ((0, m_pad - m), (0, n_pad - n)))
+    # padding rows get segment id = num_segments ⇒ outside every window
+    idxp = jnp.pad(idx.astype(jnp.int32), (0, m_pad - m),
+                   constant_values=num_segments)
+    idx2d = idxp.reshape(m_pad // m_b, m_b)
+
+    chunk_first, chunk_count = chunk_metadata(idxp, num_segments, s_b, m_b,
+                                              m_pad)
+    out_blocks = s_pad // s_b
+    n_tiles = n_pad // n_b
+    if max_chunks is None:
+        max_chunks = m_pad // m_b          # worst case: one block owns all rows
+
+    acc_dtype = jnp.float32
+
+    def x_map(b, j, k, cf, cc):
+        return (cf[b] + jnp.minimum(k, jnp.maximum(cc[b] - 1, 0)), j)
+
+    def idx_map(b, j, k, cf, cc):
+        return (cf[b] + jnp.minimum(k, jnp.maximum(cc[b] - 1, 0)), 0)
+
+    def o_map(b, j, k, cf, cc):
+        return (b, j)
+
+    common = dict(
+        grid=(out_blocks, n_tiles, max_chunks),
+        in_specs=[
+            pl.BlockSpec((1, m_b), idx_map),
+            pl.BlockSpec((m_b, n_b), x_map),
+        ],
+        out_specs=pl.BlockSpec((s_b, n_b), o_map),
+    )
+
+    if config.schedule == "PR":
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2, **common)
+        body = functools.partial(_pr_body, s_b=s_b, acc_dtype=acc_dtype)
+    else:
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2, **common,
+            scratch_shapes=[pltpu.VMEM((1, n_b), acc_dtype),
+                            pltpu.SMEM((1,), jnp.int32)])
+        body = functools.partial(_sr_body, s_b=s_b, reduce=reduce)
+
+    out = pl.pallas_call(
+        body,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((s_pad, n_pad), acc_dtype),
+        interpret=interpret,
+    )(chunk_first, chunk_count, idx2d, xp)
+
+    out = out[:num_segments, :n]
+    if reduce == "max":
+        # empty segments: match jax.ops.segment_max identity (-inf)
+        return out.astype(x.dtype)
+    return out.astype(x.dtype)

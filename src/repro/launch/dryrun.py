@@ -1,0 +1,329 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+# ^ MUST precede any jax import: jax locks the device count on first init.
+#   Set here (dry-run only) — smoke tests and benches see 1 device.
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this produces (EXPERIMENTS.md §Dry-run):
+  * compiled.memory_analysis()  — per-device bytes: proves it fits,
+  * compiled.cost_analysis()    — HLO FLOPs / bytes for §Roofline,
+  * collective bytes parsed from the optimized HLO (all-gather /
+    all-reduce / reduce-scatter / all-to-all / collective-permute),
+  * analytic per-device parameter/optimizer bytes.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all          # every runnable cell, both meshes
+  python -m repro.launch.dryrun --list
+"""
+import argparse
+import json
+import pathlib
+import re
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs as cfglib
+from repro.configs import shapes as shapelib
+from repro.distributed import sharding as shd, step as steplib
+from repro.launch.mesh import make_production_mesh
+from repro.models import lm
+from repro.models.params import is_param
+from repro.optim import adamw
+
+RESULTS_DIR = pathlib.Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+# optimizer-state precision per arch (memory plan; DESIGN.md §6)
+STATE_DTYPE = {"kimi-k2-1t-a32b": "int8", "command-r-plus-104b": "bfloat16"}
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+
+_COLL_RE = re.compile(
+    r"=\s*(\(?[a-z0-9_]+\[[^=]*?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9_]+)\[([0-9,]*)\]")
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum output bytes of every collective op in optimized HLO."""
+    out = {"all-reduce": 0, "all-gather": 0, "reduce-scatter": 0,
+           "all-to-all": 0, "collective-permute": 0}
+    counts = dict.fromkeys(out, 0)
+    for m in _COLL_RE.finditer(hlo_text):
+        shapes_str, op = m.group(1), m.group(2)
+        nbytes = 0
+        for dt, dims in _SHAPE_RE.findall(shapes_str):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        out[op] += nbytes
+        counts[op] += 1
+    return {"bytes": out, "counts": counts,
+            "total_bytes": sum(out.values())}
+
+
+def sharded_bytes(tree, shardings, mesh) -> int:
+    """Per-device bytes of a pytree under the given shardings."""
+    total = 0
+    leaves = jax.tree_util.tree_leaves(tree)
+    shs = jax.tree_util.tree_leaves(
+        shardings, is_leaf=lambda x: isinstance(x, jax.sharding.Sharding))
+    if len(shs) == 1:
+        shs = shs * len(leaves)
+    for leaf, sh in zip(leaves, shs):
+        size = leaf.size * jnp.dtype(leaf.dtype).itemsize
+        if isinstance(sh, jax.sharding.NamedSharding):
+            spec = sh.spec
+            denom = 1
+            sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+            for dim, entry in enumerate(spec):
+                if entry is None:
+                    continue
+                for ax in (entry if isinstance(entry, tuple) else (entry,)):
+                    denom *= sizes[ax]
+            size //= max(denom, 1)
+        total += size
+    return total
+
+
+def _mem_analysis(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    if ma is None:
+        return {}
+    keys = ["argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "generated_code_size_in_bytes",
+            "alias_size_in_bytes"]
+    return {k: int(getattr(ma, k)) for k in keys if hasattr(ma, k)}
+
+
+def _cost_analysis(compiled) -> dict:
+    try:
+        ca = compiled.cost_analysis()
+    except Exception:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    if not isinstance(ca, dict):
+        return {}
+    keep = {}
+    for k, v in ca.items():
+        if isinstance(v, (int, float)) and (
+                k in ("flops", "bytes accessed", "optimal_seconds")
+                or k.startswith("bytes accessed")):
+            keep[k] = float(v)
+    return keep
+
+
+def diff_cell(arch: str, shape: str, multi_pod: bool = False,
+              verbose: bool = True):
+    """Roofline differencing: lower the cell with 1 and 2 *unrolled* scan
+    periods; the difference isolates the true per-period cost that the
+    while-loop cost analysis under-reports (benchmarks/roofline.py)."""
+    import dataclasses
+    cfg = cfglib.get_config(arch)
+    if shapelib.cell_applicable(cfg, shape):
+        return {"arch": arch, "shape": shape, "status": "skipped"}
+    _, period_kinds, n_periods = lm.stack_plan(cfg)
+    p = max(len(period_kinds), 1)
+    lead = cfg.first_dense
+    out = {"arch": arch, "shape": shape,
+           "mesh": "multi" if multi_pod else "single",
+           "n_periods_full": n_periods, "period_len": p}
+    for k in (1, 2):
+        sub = dataclasses.replace(cfg, num_layers=lead + k * p,
+                                  unroll_layers=True)
+        res = run_cell(arch, shape, multi_pod, verbose=False, cfg=sub)
+        if res.get("status") != "ok":
+            out["status"] = "error"
+            out["error"] = res.get("error", "sub-lower failed")
+            return out
+        out[f"flops_{k}p"] = res["cost_analysis"].get("flops", 0.0)
+        out[f"bytes_{k}p"] = res["cost_analysis"].get("bytes accessed", 0.0)
+        out[f"coll_{k}p"] = float(res["collectives"]["total_bytes"])
+    out["status"] = "ok"
+    if verbose:
+        print(f"[diff {arch} × {shape}] per-period "
+              f"flops={out['flops_2p']-out['flops_1p']:.3e} "
+              f"coll={out['coll_2p']-out['coll_1p']:.3e}B", flush=True)
+    return out
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, verbose: bool = True,
+             cfg=None):
+    cfg = cfg if cfg is not None else cfglib.get_config(arch)
+    skip = shapelib.cell_applicable(cfg, shape)
+    result = {"arch": arch, "shape": shape,
+              "mesh": "multi" if multi_pod else "single"}
+    if skip:
+        result["status"] = "skipped"
+        result["reason"] = skip
+        return result
+
+    cell = shapelib.SHAPES[shape]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    # SP plan for unshardable-batch long-context decode
+    seq_axis = "data" if (cell.kind == "decode"
+                          and cell.global_batch % 16 != 0) else None
+    # Serving plan: resident (non-FSDP) weights when the TP-only shard fits
+    # HBM — FSDP weight all-gathers per decode token dominated the jamba
+    # long_500k cell (235 MB × 12/step measured — §Perf log #9). Training
+    # keeps FSDP (optimizer states need it).
+    fsdp = True
+    if cell.kind == "decode":
+        # decide from the FULL registry config — diff_cell lowers reduced-
+        # layer variants and must use the same plan as the full cell
+        full_cfg = cfglib.get_config(arch)
+        n_par = sum(l.size for l in jax.tree_util.tree_leaves(
+            jax.eval_shape(lambda: lm.init(jax.random.PRNGKey(0), full_cfg,
+                                           jnp.bfloat16))))
+        tp_resident_bytes = n_par * 2 / 16
+        fsdp = tp_resident_bytes > 12e9      # kimi/command-r keep FSDP
+    plan = shd.ParallelPlan.for_mesh(mesh, fsdp=fsdp, seq_shard_axis=seq_axis)
+    specs = shapelib.input_specs(cfg, shape)
+    dtype = jnp.dtype(cfg.dtype)
+
+    t0 = time.time()
+    params_sds = jax.eval_shape(
+        lambda: lm.init(jax.random.PRNGKey(0), cfg, dtype))
+    n_params = sum(l.size for l in jax.tree_util.tree_leaves(params_sds))
+    result["num_params"] = int(n_params)
+
+    with mesh:
+        if cell.kind == "train":
+            ts = steplib.TrainStepConfig(
+                opt=adamw.AdamWConfig(
+                    state_dtype=STATE_DTYPE.get(arch, "float32")),
+                remat_policy="full")
+            step_fn, shardings_for = steplib.build_train_step(cfg, mesh, plan, ts)
+            opt_sds = jax.eval_shape(
+                lambda: adamw.init(params_sds, ts.opt))
+            batch_sds = {k: v for k, v in specs.items()}
+            in_sh, out_sh = shardings_for(
+                params_sds, opt_sds,
+                {k: v.shape for k, v in specs.items()})
+            step_sds = jax.ShapeDtypeStruct((), jnp.int32)
+            lowered = jax.jit(step_fn, in_shardings=in_sh).lower(
+                params_sds, opt_sds, batch_sds, step_sds)
+            result["param_bytes_per_device"] = sharded_bytes(
+                params_sds, in_sh[0], mesh)
+            result["opt_bytes_per_device"] = sharded_bytes(
+                opt_sds, in_sh[1], mesh)
+        elif cell.kind == "prefill":
+            prefill = steplib.build_prefill_step(cfg, mesh, plan,
+                                                 remat_policy="none")
+            psh = shd.param_shardings(params_sds, plan, mesh)
+            bsh = {k: jax.sharding.NamedSharding(
+                mesh, shd.spec_for_axes(("batch", "seq"), v.shape[:2], plan,
+                                        mesh))
+                for k, v in specs.items()}
+            lowered = jax.jit(
+                lambda p, b: prefill(p, b),
+                in_shardings=(psh, bsh)).lower(params_sds, specs)
+            result["param_bytes_per_device"] = sharded_bytes(
+                params_sds, psh, mesh)
+        else:  # decode
+            serve_fn, shardings_for = steplib.build_serve_step(
+                cfg, mesh, plan, cell.global_batch, cell.seq_len)
+            state_sds = jax.eval_shape(
+                lambda: lm.init_decode_state(cfg, cell.global_batch,
+                                             cell.seq_len, dtype))
+            psh, tok_sh, st_sh = shardings_for(params_sds)
+            enc = specs.get("enc_out")
+            if enc is not None:
+                fn = lambda p, t, s, e: serve_fn(p, t, s)  # enc unused in dense path
+            lowered = jax.jit(
+                serve_fn, in_shardings=(psh, tok_sh, st_sh)).lower(
+                params_sds, specs["tokens"], state_sds)
+            result["param_bytes_per_device"] = sharded_bytes(
+                params_sds, psh, mesh)
+            result["cache_bytes_per_device"] = sharded_bytes(
+                state_sds, st_sh, mesh)
+
+        result["lower_s"] = round(time.time() - t0, 2)
+        t1 = time.time()
+        compiled = lowered.compile()
+        result["compile_s"] = round(time.time() - t1, 2)
+
+    result["memory_analysis"] = _mem_analysis(compiled)
+    result["cost_analysis"] = _cost_analysis(compiled)
+    result["collectives"] = collective_bytes(compiled.as_text())
+    result["status"] = "ok"
+    if verbose:
+        ma = result["memory_analysis"]
+        print(f"[{arch} × {shape} × {result['mesh']}] OK "
+              f"compile={result['compile_s']}s "
+              f"flops={result['cost_analysis'].get('flops', 0):.3e} "
+              f"coll={result['collectives']['total_bytes']:.3e}B "
+              f"temp={ma.get('temp_size_in_bytes', 0):.3e}B",
+              flush=True)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=cfglib.ARCH_NAMES)
+    ap.add_argument("--shape", choices=shapelib.SHAPE_NAMES)
+    ap.add_argument("--mesh", choices=["single", "multi"], default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--diff", action="store_true",
+                    help="roofline differencing mode (1p/2p unrolled lowers)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    if args.list:
+        for a in cfglib.ARCH_NAMES:
+            cfg = cfglib.get_config(a)
+            for s in shapelib.SHAPE_NAMES:
+                skip = shapelib.cell_applicable(cfg, s)
+                print(f"{a:24s} {s:12s} {'SKIP: ' + skip if skip else 'run'}")
+        return
+
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    cells = []
+    if args.all:
+        for a in cfglib.ARCH_NAMES:
+            for s in shapelib.SHAPE_NAMES:
+                for m in (False, True):
+                    cells.append((a, s, m))
+    else:
+        assert args.arch and args.shape
+        cells.append((args.arch, args.shape, args.mesh == "multi"))
+
+    failures = 0
+    for a, s, m in cells:
+        tag = f"{a}__{s}__{'multi' if m else 'single'}"
+        base = RESULTS_DIR.parent / "roofline_diff" if args.diff else RESULTS_DIR
+        base.mkdir(parents=True, exist_ok=True)
+        out_path = pathlib.Path(args.out) if args.out else base / f"{tag}.json"
+        try:
+            res = diff_cell(a, s, m) if args.diff else run_cell(a, s, m)
+        except Exception as e:  # noqa: BLE001 — recorded per cell
+            res = {"arch": a, "shape": s,
+                   "mesh": "multi" if m else "single",
+                   "status": "error", "error": repr(e),
+                   "traceback": traceback.format_exc()}
+            failures += 1
+            print(f"[{tag}] FAILED: {e!r}", flush=True)
+        out_path.write_text(json.dumps(res, indent=2))
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

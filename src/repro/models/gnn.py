@@ -1,0 +1,134 @@
+"""Message-passing GNNs on GeoT ops (paper §V: GCN, GIN, GraphSAGE; +GAT).
+
+Graphs are tensors (format-agnostic, §IV): ``edge_index`` (2, E) with
+``edge_index[1]`` (destinations) sorted non-decreasing — the PyG convention
+the paper relies on.  Aggregation is ``index_segment_reduce`` /
+``index_weight_segment_reduce`` (fused message+aggregate) throughout; no
+sparse formats anywhere.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ops as geot
+from repro.models.params import P, dense_init, zeros_init
+
+
+# ---------------------------------------------------------------------------
+# layers (paper Listing 2 style)
+# ---------------------------------------------------------------------------
+
+def gcn_layer_init(key, d_in: int, d_out: int, dtype=jnp.float32):
+    return {"w": dense_init(key, d_in, d_out, ("embed", "mlp"), dtype),
+            "b": zeros_init((d_out,), ("mlp",), dtype)}
+
+
+def gcn_layer(prm, x, edge_index, deg_inv_sqrt, num_nodes: int,
+              impl: str = "ref"):
+    """GCN: Y = D^{-1/2} A D^{-1/2} X W — SpMM with weights = normalized
+    coefficients, i.e. index_weight_segment_reduce (paper §IV / Fig. 10)."""
+    src, dst = edge_index[0], edge_index[1]
+    h = x @ prm["w"].value
+    w = deg_inv_sqrt[src] * deg_inv_sqrt[dst]
+    out = geot.index_weight_segment_reduce(h, src, w, dst, num_nodes,
+                                           impl=impl)
+    return out + prm["b"].value
+
+
+def gin_layer_init(key, d_in: int, d_out: int, dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    return {
+        "mlp1": dense_init(k1, d_in, d_out, ("embed", "mlp"), dtype),
+        "mlp2": dense_init(k2, d_out, d_out, ("mlp", "embed"), dtype),
+        "b1": zeros_init((d_out,), ("mlp",), dtype),
+        "b2": zeros_init((d_out,), ("embed",), dtype),
+        "eps": P(jnp.zeros((), jnp.float32), ()),
+    }
+
+
+def gin_layer(prm, x, edge_index, num_nodes: int, impl: str = "ref"):
+    """GIN: h' = MLP((1+ε)·h + Σ_neighbors h) — unweighted fused aggregate."""
+    src, dst = edge_index[0], edge_index[1]
+    agg = geot.index_segment_reduce(x, src, dst, num_nodes, impl=impl)
+    h = (1.0 + prm["eps"].value) * x + agg
+    h = jax.nn.relu(h @ prm["mlp1"].value + prm["b1"].value)
+    return h @ prm["mlp2"].value + prm["b2"].value
+
+
+def sage_layer_init(key, d_in: int, d_out: int, dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    return {"w_self": dense_init(k1, d_in, d_out, ("embed", "mlp"), dtype),
+            "w_neigh": dense_init(k2, d_in, d_out, ("embed", "mlp"), dtype),
+            "b": zeros_init((d_out,), ("mlp",), dtype)}
+
+
+def sage_layer(prm, x, edge_index, num_nodes: int, impl: str = "ref"):
+    """GraphSAGE (mean aggregator)."""
+    src, dst = edge_index[0], edge_index[1]
+    agg = geot.index_segment_reduce(x, src, dst, num_nodes, reduce="mean",
+                                    impl=impl)
+    return (x @ prm["w_self"].value + agg @ prm["w_neigh"].value
+            + prm["b"].value)
+
+
+def gat_layer_init(key, d_in: int, d_out: int, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"w": dense_init(k1, d_in, d_out, ("embed", "mlp"), dtype),
+            "a_src": dense_init(k2, d_out, 1, ("mlp", None), dtype),
+            "a_dst": dense_init(k3, d_out, 1, ("mlp", None), dtype)}
+
+
+def gat_layer(prm, x, edge_index, num_nodes: int, impl: str = "ref"):
+    """Single-head GAT: attention coefficients via segment_softmax over the
+    sorted destination segments."""
+    src, dst = edge_index[0], edge_index[1]
+    h = x @ prm["w"].value
+    alpha = (h @ prm["a_src"].value)[src, 0] + (h @ prm["a_dst"].value)[dst, 0]
+    alpha = geot.segment_softmax(jax.nn.leaky_relu(alpha, 0.2), dst, num_nodes)
+    return geot.index_weight_segment_reduce(h, src, alpha, dst, num_nodes,
+                                            impl=impl)
+
+
+# ---------------------------------------------------------------------------
+# 3-layer models (paper §V-F: node classification, 3 layers, hidden 32/64)
+# ---------------------------------------------------------------------------
+
+_LAYER = {"gcn": (gcn_layer_init, gcn_layer),
+          "gin": (gin_layer_init, gin_layer),
+          "sage": (sage_layer_init, sage_layer),
+          "gat": (gat_layer_init, gat_layer)}
+
+
+def init(key, model: str, d_in: int, hidden: int, num_classes: int,
+         num_layers: int = 3, dtype=jnp.float32):
+    init_fn, _ = _LAYER[model]
+    dims = [d_in] + [hidden] * (num_layers - 1) + [num_classes]
+    ks = jax.random.split(key, num_layers)
+    return [init_fn(k, dims[i], dims[i + 1], dtype)
+            for i, k in enumerate(ks)]
+
+
+def forward(params, model: str, x, edge_index, num_nodes: int,
+            deg_inv_sqrt: Optional[jax.Array] = None, impl: str = "ref"):
+    _, layer_fn = _LAYER[model]
+    h = x
+    for i, prm in enumerate(params):
+        if model == "gcn":
+            h = layer_fn(prm, h, edge_index, deg_inv_sqrt, num_nodes, impl)
+        else:
+            h = layer_fn(prm, h, edge_index, num_nodes, impl)
+        if i < len(params) - 1:
+            h = jax.nn.relu(h)
+    return h
+
+
+def loss_fn(params, model: str, x, edge_index, labels, num_nodes: int,
+            deg_inv_sqrt=None, impl: str = "ref"):
+    logits = forward(params, model, x, edge_index, num_nodes,
+                     deg_inv_sqrt, impl)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - gold)

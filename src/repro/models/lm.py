@@ -1,0 +1,408 @@
+"""Unified LM assembly for every assigned architecture.
+
+A stack is a (possibly heterogeneous) sequence of blocks; block *kind* is
+(mixer, ffn) with mixer ∈ {attn, mamba, rwkv} and ffn ∈ {mlp, moe}.  The
+kind sequence is periodic (Jamba: period 8 — one attention layer per 8,
+MoE every other layer; dense/MoE/RWKV archs: period 1), so the stack scans
+over periods with per-slot stacked params — HLO size stays O(period), not
+O(depth), keeping 61-layer dry-run compiles tractable.
+
+Encoder-decoder (Whisper) and prefix-embedding (VLM/audio stubs) variants
+reuse the same machinery.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers, moe as moe_lib, rwkv as rwkv_lib, ssm as ssm_lib
+from repro.models.config import ModelConfig
+from repro.models.params import P, dense_init, stack_layers
+
+# ---------------------------------------------------------------------------
+# kinds & periodicity
+# ---------------------------------------------------------------------------
+
+def layer_kind(cfg: ModelConfig, i: int):
+    if cfg.rwkv:
+        mixer = "rwkv"
+    elif cfg.is_attn_layer(i):
+        mixer = "attn"
+    else:
+        mixer = "mamba"
+    return (mixer, "moe" if cfg.is_moe_layer(i) else "mlp")
+
+
+def stack_plan(cfg: ModelConfig, num_layers: Optional[int] = None):
+    """(lead_kinds, period_kinds, num_periods)."""
+    n = num_layers if num_layers is not None else cfg.num_layers
+    kinds = [layer_kind(cfg, i) for i in range(n)]
+    if cfg.unroll_layers:
+        return kinds, [], 0
+    lead = cfg.first_dense
+    body = kinds[lead:]
+    if not body:
+        return kinds, [], 0
+    for p in range(1, len(body) + 1):
+        if len(body) % p == 0 and all(
+                body[i] == body[i % p] for i in range(len(body))):
+            return kinds[:lead], body[:p], len(body) // p
+    return kinds, [], 0  # unreachable
+
+
+# ---------------------------------------------------------------------------
+# block init / forward
+# ---------------------------------------------------------------------------
+
+def _mixer_init(key, cfg, kind, dtype):
+    if kind == "attn":
+        return layers.attention_init(key, cfg, dtype)
+    if kind == "mamba":
+        return ssm_lib.ssm_init(key, cfg, dtype)
+    return rwkv_lib.rwkv_init(key, cfg, dtype)
+
+
+def _ffn_init(key, cfg, kind, dtype):
+    if kind == "moe":
+        return moe_lib.moe_init(key, cfg, dtype)
+    if cfg.rwkv:
+        return rwkv_lib.channel_mix_init(key, cfg, dtype)
+    return layers.mlp_init(key, cfg, dtype)
+
+
+def block_init(key, cfg: ModelConfig, kind, dtype, cross: bool = False):
+    ks = jax.random.split(key, 4)
+    prm = {
+        "norm1": layers.norm_init(cfg),
+        "mixer": _mixer_init(ks[0], cfg, kind[0], dtype),
+        "norm2": layers.norm_init(cfg),
+        "ffn": _ffn_init(ks[1], cfg, kind[1], dtype),
+    }
+    if cross:
+        prm["norm_x"] = layers.norm_init(cfg)
+        prm["cross"] = layers.attention_init(ks[2], cfg, dtype)
+    return prm
+
+
+class BlockAux(NamedTuple):
+    moe_aux: jax.Array
+
+
+def block_forward(prm, x, cfg: ModelConfig, kind, positions=None,
+                  causal: bool = True, enc_kv=None, moe_impl: str = "capacity"):
+    """Full-sequence block (train / prefill). Returns (x, aux)."""
+    mixer, ffn = kind
+    aux = jnp.zeros((), jnp.float32)
+    h = layers.apply_norm(prm["norm1"], x, cfg)
+    if mixer == "attn":
+        mix = layers.attention(prm["mixer"], h, cfg, positions, causal)
+    elif mixer == "mamba":
+        st = ssm_lib.SSMState(
+            jnp.zeros((x.shape[0], cfg.d_conv - 1,
+                       cfg.expand * cfg.d_model), jnp.float32),
+            jnp.zeros((x.shape[0], cfg.expand * cfg.d_model, cfg.d_state),
+                      jnp.float32))
+        mix, _ = ssm_lib.ssm_forward(prm["mixer"], h, cfg, st)
+    else:  # rwkv
+        st = rwkv_lib.RWKVState(
+            jnp.zeros((x.shape[0], cfg.num_heads, cfg.head_dim,
+                       cfg.head_dim), jnp.float32),
+            jnp.zeros((x.shape[0], cfg.d_model), jnp.float32),
+            jnp.zeros((x.shape[0], cfg.d_model), jnp.float32))
+        mix, _ = rwkv_lib.rwkv_time_mix(prm["mixer"], h, cfg, st)
+
+    if cfg.parallel_block:
+        # cohere-style: attn and ffn read the same normed input
+        f = layers.mlp(prm["ffn"], h, cfg)
+        return x + mix + f, BlockAux(aux)
+
+    x = x + mix
+    if "cross" in prm and enc_kv is not None:
+        hx = layers.apply_norm(prm["norm_x"], x, cfg)
+        x = x + layers.attention(prm["cross"], hx, cfg, positions, kv=enc_kv)
+    h2 = layers.apply_norm(prm["norm2"], x, cfg)
+    if ffn == "moe":
+        f, aux = moe_lib.moe(prm["ffn"], h2, cfg, impl=moe_impl)
+    elif cfg.rwkv:
+        f, _ = rwkv_lib.rwkv_channel_mix(
+            prm["ffn"], h2, cfg,
+            rwkv_lib.RWKVState(jnp.zeros((1,), jnp.float32),
+                               jnp.zeros((1,), jnp.float32),
+                               jnp.zeros((x.shape[0], cfg.d_model),
+                                         jnp.float32)))
+    else:
+        f = layers.mlp(prm["ffn"], h2, cfg)
+    return x + f, BlockAux(aux)
+
+
+# ---------------------------------------------------------------------------
+# model init
+# ---------------------------------------------------------------------------
+
+def init(key, cfg: ModelConfig, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 8)
+    lead_kinds, period_kinds, n_periods = stack_plan(cfg)
+    prm: dict = {"embed": layers.embedding_init(ks[0], cfg, dtype),
+                 "final_norm": layers.norm_init(cfg)}
+    if not cfg.tie_embeddings:
+        prm["lm_head"] = dense_init(ks[1], cfg.d_model, cfg.padded_vocab,
+                                    ("embed", "vocab"), dtype)
+    if cfg.pos == "learned":
+        prm["pos_embed"] = P(
+            jax.random.normal(ks[2], (cfg.max_seq, cfg.d_model), dtype) * 0.02,
+            (None, "embed"))
+
+    cross = cfg.cross_attention
+    prm["lead"] = [block_init(k, cfg, kind, dtype, cross=cross)
+                   for k, kind in zip(jax.random.split(ks[3],
+                                                       max(len(lead_kinds), 1)),
+                                      lead_kinds)]
+    prm["period"] = [
+        stack_layers(jax.random.split(ks[4], len(period_kinds))[s], n_periods,
+                     functools.partial(block_init, cfg=cfg,
+                                       kind=period_kinds[s], dtype=dtype,
+                                       cross=cross))
+        for s in range(len(period_kinds))
+    ]
+    if cfg.encoder_layers:
+        enc_cfg = cfg
+        prm["enc_blocks"] = [
+            block_init(k, enc_cfg, ("attn", "mlp"), dtype)
+            for k in jax.random.split(ks[5], cfg.encoder_layers)]
+        prm["enc_norm"] = layers.norm_init(cfg)
+        prm["enc_pos"] = P(
+            jax.random.normal(ks[6], (cfg.max_seq, cfg.d_model), dtype) * 0.02,
+            (None, "embed"))
+    return prm
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _remat(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    return jax.checkpoint(fn)          # "full"
+
+
+def encode(prm, cfg: ModelConfig, enc_embeds):
+    """Whisper encoder over stubbed frame embeddings (B, S_enc, D)."""
+    x = enc_embeds + prm["enc_pos"].value[: enc_embeds.shape[1]]
+    for bp in prm["enc_blocks"]:
+        x, _ = block_forward(bp, x, cfg, ("attn", "mlp"), causal=False)
+    return layers.apply_norm(prm["enc_norm"], x, cfg)
+
+
+def forward(prm, cfg: ModelConfig, tokens, prefix_embeds=None,
+            enc_embeds=None, remat_policy: str = "full",
+            moe_impl: str = "capacity"):
+    """tokens: (B, S) int32 → logits (B, S_total, vocab_pad) fp32.
+
+    prefix_embeds: (B, P, D) stubbed modality frontend output (VLM/audio),
+    prepended to the token embeddings (DESIGN.md §5).
+    enc_embeds: (B, S_enc, D) encoder-side stub (Whisper)."""
+    from repro.distributed.sharding import ashard
+    x = layers.embed(prm["embed"], tokens)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    x = ashard(x, "batch", "seq", None)
+    b, s, _ = x.shape
+    if cfg.pos == "learned":
+        x = x + prm["pos_embed"].value[:s]
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    enc_kv = None
+    if enc_embeds is not None and cfg.encoder_layers:
+        enc_out = encode(prm, cfg, enc_embeds)
+        enc_kv = enc_out
+
+    lead_kinds, period_kinds, _ = stack_plan(cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+
+    def run_block(bp, x, kind):
+        kv = None
+        if enc_kv is not None:
+            # project encoder output through this block's cross-attn K/V
+            ck = layers._project_qkv(bp["cross"], enc_kv, cfg, positions=None,
+                                     apply_rope=False)
+            kv = (ck[1], ck[2])
+        return block_forward(bp, x, cfg, kind, positions=positions,
+                             causal=True, enc_kv=kv, moe_impl=moe_impl)
+
+    for bp, kind in zip(prm["lead"], lead_kinds):
+        x, aux = run_block(bp, x, kind)
+        aux_total = aux_total + aux.moe_aux
+
+    if period_kinds:
+        def period_fn(x, period_params):
+            x = ashard(x, "batch", "seq", None)   # re-pin inside the scan
+            aux_p = jnp.zeros((), jnp.float32)
+            for s, kind in enumerate(period_kinds):
+                x, aux = run_block(period_params[s], x, kind)
+                aux_p = aux_p + aux.moe_aux
+            return x, aux_p
+
+        body = _remat(period_fn, remat_policy)
+        x, aux_seq = jax.lax.scan(
+            lambda c, pp: body(c, pp), x, tuple(prm["period"]))
+        aux_total = aux_total + jnp.sum(aux_seq)
+
+    x = layers.apply_norm(prm["final_norm"], x, cfg)
+    if cfg.tie_embeddings:
+        logits = layers.unembed(prm["embed"], x, cfg)
+    else:
+        logits = (x @ prm["lm_head"].value).astype(jnp.float32) * cfg.logit_scale
+    logits = ashard(logits, "batch", "seq", "act_vocab")
+    return logits, aux_total
+
+
+def loss_fn(prm, cfg: ModelConfig, batch, remat_policy: str = "full",
+            moe_impl: str = "capacity", aux_weight: float = 0.01):
+    """Next-token cross entropy (+ MoE load-balance aux)."""
+    tokens = batch["tokens"]
+    logits, aux = forward(prm, cfg, tokens,
+                          prefix_embeds=batch.get("prefix_embeds"),
+                          enc_embeds=batch.get("enc_embeds"),
+                          remat_policy=remat_policy, moe_impl=moe_impl)
+    # align: prefix positions (if any) produce no loss
+    p = logits.shape[1] - tokens.shape[1]
+    logits = logits[:, p:]
+    labels = batch["labels"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    mask = batch.get("mask", jnp.ones_like(labels, jnp.float32))
+    ce = jnp.sum((logz - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return ce + aux_weight * aux, {"ce": ce, "moe_aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# decode (single-token serve step with cache/state)
+# ---------------------------------------------------------------------------
+
+class DecodeState(NamedTuple):
+    """Per-slot caches, each stacked over periods (lead slots separate)."""
+    lead: tuple
+    period: tuple
+    length: jax.Array
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
+                      dtype=jnp.bfloat16) -> DecodeState:
+    lead_kinds, period_kinds, n_periods = stack_plan(cfg)
+
+    def mk(kind, n):
+        mixer = kind[0]
+        if mixer == "attn":
+            # raw (k, v) tuple — no scalar length inside scanned pytrees
+            shape = (n, batch, max_len, cfg.num_kv_heads, cfg.head_dim)
+            return (jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+        if mixer == "mamba":
+            return ssm_lib.init_ssm_state(cfg, batch, n)
+        return rwkv_lib.init_rwkv_state(cfg, batch, n)
+
+    lead = tuple(jax.tree_util.tree_map(lambda a: a[0], mk(kind, 1))
+                 for kind in lead_kinds)
+    period = tuple(mk(kind, n_periods) for kind in period_kinds)
+    return DecodeState(lead, period, jnp.zeros((), jnp.int32))
+
+
+def _block_decode(bp, x, cfg, kind, cache, length, enc_kv=None,
+                  moe_impl: str = "capacity", lengths=None):
+    mixer, ffn = kind
+    h = layers.apply_norm(bp["norm1"], x, cfg)
+    if mixer == "attn":
+        kvc = layers.KVCache(cache[0], cache[1], length)
+        mix, new_kv = layers.attention_decode(bp["mixer"], h, cfg, kvc,
+                                              lengths=lengths)
+        new_cache = (new_kv.k, new_kv.v)
+    elif mixer == "mamba":
+        mix, new_cache = ssm_lib.ssm_forward(bp["mixer"], h, cfg, cache)
+    else:
+        mix, st = rwkv_lib.rwkv_time_mix(bp["mixer"], h, cfg, cache)
+        new_cache = st
+
+    if cfg.parallel_block:
+        f = layers.mlp(bp["ffn"], h, cfg)
+        return x + mix + f, new_cache
+
+    x = x + mix
+    if "cross" in bp and enc_kv is not None:
+        hx = layers.apply_norm(bp["norm_x"], x, cfg)
+        x = x + layers.attention(bp["cross"], hx, cfg, kv=enc_kv)
+    h2 = layers.apply_norm(bp["norm2"], x, cfg)
+    if ffn == "moe":
+        f, _ = moe_lib.moe(bp["ffn"], h2, cfg, impl=moe_impl)
+    elif cfg.rwkv:
+        f, st2 = rwkv_lib.rwkv_channel_mix(bp["ffn"], h2, cfg, new_cache)
+        new_cache = st2
+    else:
+        f = layers.mlp(bp["ffn"], h2, cfg)
+    return x + f, new_cache
+
+
+def decode_step(prm, cfg: ModelConfig, tokens, state: DecodeState,
+                enc_out=None, moe_impl: str = "capacity", lengths=None):
+    """tokens: (B, 1) int32 → (logits (B, 1, V), new DecodeState).
+
+    lengths: optional (B,) per-slot cache lengths (continuous batching —
+    repro.serving.scheduler); default: the shared state.length counter."""
+    from repro.distributed.sharding import ashard
+    x = layers.embed(prm["embed"], tokens)
+    x = ashard(x, "batch", None, None)
+    if cfg.pos == "learned":
+        if lengths is None:
+            x = x + jax.lax.dynamic_slice_in_dim(prm["pos_embed"].value,
+                                                 state.length, 1, axis=0)
+        else:
+            x = x + jnp.take(prm["pos_embed"].value, lengths, axis=0)[:, None]
+    lead_kinds, period_kinds, _ = stack_plan(cfg)
+
+    new_lead = []
+    for bp, kind, cache in zip(prm["lead"], lead_kinds, state.lead):
+        kv = None
+        if enc_out is not None and "cross" in bp:
+            ck = layers._project_qkv(bp["cross"], enc_out, cfg, positions=None,
+                                     apply_rope=False)
+            kv = (ck[1], ck[2])
+        x, nc = _block_decode(bp, x, cfg, kind, cache, state.length, enc_kv=kv,
+                              moe_impl=moe_impl, lengths=lengths)
+        new_lead.append(nc)
+
+    new_period = []
+    if period_kinds:
+        def period_fn(carry, inp):
+            x = carry
+            pp, caches = inp
+            new_caches = []
+            for s, kind in enumerate(period_kinds):
+                kv = None
+                if enc_out is not None and "cross" in pp[s]:
+                    ck = layers._project_qkv(pp[s]["cross"], enc_out, cfg,
+                                             positions=None, apply_rope=False)
+                    kv = (ck[1], ck[2])
+                x, nc = _block_decode(pp[s], x, cfg, kind, caches[s],
+                                      state.length, enc_kv=kv,
+                                      moe_impl=moe_impl, lengths=lengths)
+                new_caches.append(nc)
+            return x, tuple(new_caches)
+
+        x, stacked_new = jax.lax.scan(period_fn, x,
+                                      (tuple(prm["period"]), state.period))
+        new_period = list(stacked_new)
+
+    x = layers.apply_norm(prm["final_norm"], x, cfg)
+    if cfg.tie_embeddings:
+        logits = layers.unembed(prm["embed"], x, cfg)
+    else:
+        logits = (x @ prm["lm_head"].value).astype(jnp.float32) * cfg.logit_scale
+    new_state = DecodeState(tuple(new_lead), tuple(new_period),
+                            state.length + 1)
+    return logits, new_state

@@ -1,0 +1,89 @@
+"""Parameter pytree with logical sharding axes (MaxText-style).
+
+Every parameter is created as a :class:`P` leaf carrying logical axis names
+("embed", "mlp", "heads", "vocab", "expert", "layers", …).
+``split`` separates values from axes; :mod:`repro.distributed.sharding` maps
+logical axes onto mesh axes per parallelism plan (DP/FSDP/TP/EP).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class P:
+    """A parameter leaf: value + logical axes (one name or None per dim).
+
+    Registered as a pytree node (value = child, axes = aux data) so P-trees
+    flow through jit/grad/optimizers; ``axes`` ride along as metadata."""
+    value: jax.Array
+    axes: Tuple[Optional[str], ...]
+
+    # NOTE: no ndim==len(axes) assert — transforms (lax.scan over stacked
+    # layers) legitimately slice the leading "layers" dim off the value while
+    # the aux axes ride along unchanged. Axes are only interpreted on the
+    # outer (unsliced) tree by the sharding rules.
+
+
+jax.tree_util.register_pytree_node(
+    P,
+    lambda p: ((p.value,), p.axes),
+    lambda axes, children: P(children[0], axes),
+)
+
+
+def is_param(x: Any) -> bool:
+    return isinstance(x, P)
+
+
+def split(tree):
+    """(values, logical_axes) pytrees with identical structure."""
+    values = jax.tree_util.tree_map(lambda p: p.value, tree, is_leaf=is_param)
+    axes = jax.tree_util.tree_map(lambda p: p.axes, tree, is_leaf=is_param)
+    return values, axes
+
+
+def count_params(values) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(values))
+
+
+def param_bytes(values) -> int:
+    return sum(int(x.size * x.dtype.itemsize)
+               for x in jax.tree_util.tree_leaves(values))
+
+
+# -- initializers ----------------------------------------------------------
+
+def dense_init(key, in_dim: int, out_dim: int, axes, dtype, scale: float = 1.0):
+    std = scale / jnp.sqrt(in_dim)
+    w = jax.random.normal(key, (in_dim, out_dim), dtype) * jnp.asarray(std, dtype)
+    return P(w, axes)
+
+
+def embed_init(key, vocab: int, dim: int, dtype):
+    w = jax.random.normal(key, (vocab, dim), dtype) * jnp.asarray(0.02, dtype)
+    return P(w, ("vocab", "embed"))
+
+
+def zeros_init(shape, axes, dtype):
+    return P(jnp.zeros(shape, dtype), axes)
+
+
+def ones_init(shape, axes, dtype):
+    return P(jnp.ones(shape, dtype), axes)
+
+
+def stack_layers(key, n: int, init_fn):
+    """Initialize `n` structurally-identical layers stacked on a leading
+    "layers" axis (enables lax.scan over layers — keeps HLO size O(1) in
+    depth, essential for 61-layer dry-run compiles)."""
+    keys = jax.random.split(key, n)
+    trees = [init_fn(k) for k in keys]
+    return jax.tree_util.tree_map(
+        lambda *leaves: P(jnp.stack([l.value for l in leaves]),
+                          ("layers",) + leaves[0].axes),
+        *trees, is_leaf=is_param)

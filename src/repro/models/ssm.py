@@ -1,0 +1,99 @@
+"""Mamba selective-SSM block (for Jamba's hybrid stack, arXiv:2403.19887).
+
+Standard Mamba-1 formulation: in-proj → causal conv1d → data-dependent
+(Δ, B, C) → diagonal state-space scan → gated out-proj. The scan is a
+`lax.scan` over time (O(1)-state decode ⇒ Jamba runs the long_500k cell).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.params import P, dense_init, zeros_init
+
+
+class SSMState(NamedTuple):
+    conv: jax.Array      # (B, d_conv-1, d_inner) rolling conv window
+    h: jax.Array         # (B, d_inner, d_state) SSM state
+
+
+def _dt_rank(cfg: ModelConfig) -> int:
+    return max(1, math.ceil(cfg.d_model / 16))
+
+
+def ssm_init(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    di = cfg.expand * d
+    ds = cfg.d_state
+    dtr = _dt_rank(cfg)
+    ks = jax.random.split(key, 6)
+    a = jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32)[None], (di, 1))
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * di, ("embed", "mlp"), dtype),
+        "conv_w": P(jax.random.normal(ks[1], (cfg.d_conv, di), jnp.float32)
+                    * (1.0 / math.sqrt(cfg.d_conv)), (None, "mlp")),
+        "conv_b": zeros_init((di,), ("mlp",), jnp.float32),
+        "x_proj": dense_init(ks[2], di, dtr + 2 * ds, ("mlp", None), dtype),
+        "dt_proj": dense_init(ks[3], dtr, di, (None, "mlp"), jnp.float32),
+        "dt_bias": P(jnp.log(jnp.expm1(
+            jnp.clip(jax.random.uniform(ks[4], (di,)) * 0.099 + 0.001,
+                     1e-4, None))), ("mlp",)),
+        "a_log": P(jnp.log(a), ("mlp", None)),
+        "d_skip": P(jnp.ones((di,), jnp.float32), ("mlp",)),
+        "out_proj": dense_init(ks[5], di, d, ("mlp", "embed"), dtype),
+    }
+
+
+def _selective_scan(prm, xc, cfg: ModelConfig, h0):
+    """xc: (B, S, di) post-conv. Returns (y (B,S,di), h_final)."""
+    dtr, ds = _dt_rank(cfg), cfg.d_state
+    dbl = xc @ prm["x_proj"].value
+    dt = jax.nn.softplus(
+        dbl[..., :dtr].astype(jnp.float32) @ prm["dt_proj"].value
+        + prm["dt_bias"].value)                                  # (B,S,di)
+    bmat = dbl[..., dtr:dtr + ds].astype(jnp.float32)            # (B,S,ds)
+    cmat = dbl[..., dtr + ds:].astype(jnp.float32)               # (B,S,ds)
+    a = -jnp.exp(prm["a_log"].value)                             # (di,ds)
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp                                    # (B,di),(B,di),(B,ds),(B,ds)
+        da = jnp.exp(dtt[..., None] * a)                         # (B,di,ds)
+        dbx = (dtt * xt.astype(jnp.float32))[..., None] * bt[:, None, :]
+        h = da * h + dbx
+        y = jnp.einsum("bds,bs->bd", h, ct)
+        return h, y
+
+    xs = (xc.transpose(1, 0, 2), dt.transpose(1, 0, 2),
+          bmat.transpose(1, 0, 2), cmat.transpose(1, 0, 2))
+    h_final, ys = jax.lax.scan(step, h0, xs)
+    y = ys.transpose(1, 0, 2) + xc.astype(jnp.float32) * prm["d_skip"].value
+    return y, h_final
+
+
+def ssm_forward(prm, x, cfg: ModelConfig, state: SSMState):
+    """x: (B, S, D) → (out, new_state)."""
+    b, s, _ = x.shape
+    di = cfg.expand * cfg.d_model
+    xz = x @ prm["in_proj"].value
+    xin, z = xz[..., :di], xz[..., di:]
+    # causal depthwise conv1d with carried window
+    window = jnp.concatenate([state.conv.astype(xin.dtype), xin], axis=1)
+    segs = [window[:, i: i + s] * prm["conv_w"].value[i].astype(xin.dtype)
+            for i in range(cfg.d_conv)]
+    xc = jax.nn.silu(sum(segs) + prm["conv_b"].value.astype(xin.dtype))
+    y, h_final = _selective_scan(prm, xc, cfg, state.h)
+    out = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype) \
+        @ prm["out_proj"].value
+    new_conv = window[:, s:]                                     # last d_conv-1
+    return out, SSMState(new_conv.astype(jnp.float32), h_final)
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, num_layers: int):
+    di = cfg.expand * cfg.d_model
+    return SSMState(
+        jnp.zeros((num_layers, batch, cfg.d_conv - 1, di), jnp.float32),
+        jnp.zeros((num_layers, batch, di, cfg.d_state), jnp.float32))

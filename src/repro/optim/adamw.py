@@ -1,0 +1,112 @@
+"""AdamW with configurable state precision (fp32 / bf16 / int8-quantized
+moments) — the optimizer-memory lever for the trillion-parameter cells.
+
+int8 states use per-tensor absmax scaling (blockwise refinement noted in
+DESIGN.md); the quantization error is re-absorbed every step since moments
+are reconstructed, updated in fp32, and re-quantized.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    state_dtype: str = "float32"      # float32 | bfloat16 | int8
+
+
+class QTensor(NamedTuple):
+    """int8 payload + fp32 absmax scale (per tensor)."""
+    q: jax.Array
+    scale: jax.Array
+
+
+def _quantize(x):
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    return QTensor(jnp.round(x / scale).astype(jnp.int8), scale)
+
+
+def _dequantize(qt: QTensor):
+    return qt.q.astype(jnp.float32) * qt.scale
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+def _encode(x, dtype: str):
+    if dtype == "int8":
+        return _quantize(x)
+    return x.astype(jnp.dtype(dtype))
+
+
+def _decode(x, dtype: str):
+    if dtype == "int8":
+        return _dequantize(x)
+    return x.astype(jnp.float32)
+
+
+def init(params, cfg: AdamWConfig) -> AdamWState:
+    zeros = jax.tree_util.tree_map(
+        lambda p: _encode(jnp.zeros(p.shape, jnp.float32), cfg.state_dtype),
+        params)
+    zeros2 = jax.tree_util.tree_map(
+        lambda p: _encode(jnp.zeros(p.shape, jnp.float32), cfg.state_dtype),
+        params)
+    return AdamWState(jnp.zeros((), jnp.int32), zeros, zeros2)
+
+
+def global_norm(tree):
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def update(grads, state: AdamWState, params, cfg: AdamWConfig,
+           lr_scale=1.0):
+    """Returns (new_params, new_state, metrics). Trees may be P-trees (the
+    math applies leaf-wise to raw arrays)."""
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
+    lr = cfg.lr * lr_scale
+    sd = cfg.state_dtype
+    is_q = lambda x: isinstance(x, QTensor)
+
+    def upd(g, mu, nu, p):
+        g = g.astype(jnp.float32) * clip
+        mu = cfg.b1 * _decode(mu, sd) + (1.0 - cfg.b1) * g
+        nu = cfg.b2 * _decode(nu, sd) + (1.0 - cfg.b2) * jnp.square(g)
+        u = (mu / bc1) / (jnp.sqrt(nu / bc2) + cfg.eps)
+        u = u + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+        return new_p, _encode(mu, sd), _encode(nu, sd)
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_mu = treedef.flatten_up_to(state.mu) if sd == "int8" else \
+        jax.tree_util.tree_leaves(state.mu)
+    flat_nu = treedef.flatten_up_to(state.nu) if sd == "int8" else \
+        jax.tree_util.tree_leaves(state.nu)
+    flat_p = jax.tree_util.tree_leaves(params)
+    out = [upd(g, m, n, p) for g, m, n, p
+           in zip(flat_g, flat_mu, flat_nu, flat_p)]
+    new_params = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_mu = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_nu = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    return new_params, AdamWState(step, new_mu, new_nu), {
+        "grad_norm": gnorm, "lr": jnp.asarray(lr, jnp.float32)}

@@ -1,0 +1,51 @@
+"""Error-feedback int8 gradient compression (cross-pod hop).
+
+1-bit/8-bit Adam-style EF-compression: the quantization residual is carried
+in an error-feedback buffer and re-injected next step, so the compressed
+all-reduce is unbiased in the long run.  Used by
+``repro.distributed.collectives.compressed_psum`` for the pod axis (DCI is
+the thin link — 8× fewer bytes cross-pod), and unit-tested standalone.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Compressed(NamedTuple):
+    q: jax.Array          # int8 payload
+    scale: jax.Array      # () fp32 absmax scale
+
+
+def compress(x, error_feedback):
+    """(x + ef) → int8; returns (compressed, new_ef)."""
+    v = x.astype(jnp.float32) + error_feedback
+    scale = jnp.maximum(jnp.max(jnp.abs(v)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(v / scale), -127, 127).astype(jnp.int8)
+    new_ef = v - q.astype(jnp.float32) * scale
+    return Compressed(q, scale), new_ef
+
+
+def decompress(c: Compressed):
+    return c.q.astype(jnp.float32) * c.scale
+
+
+def init_error_feedback(tree):
+    return jax.tree_util.tree_map(
+        lambda x: jnp.zeros(x.shape, jnp.float32), tree)
+
+
+def compress_tree(grads, ef_tree) -> Tuple:
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_ef = treedef.flatten_up_to(ef_tree)
+    pairs = [compress(g, e) for g, e in zip(flat_g, flat_ef)]
+    comp = jax.tree_util.tree_unflatten(treedef, [p[0] for p in pairs])
+    new_ef = jax.tree_util.tree_unflatten(treedef, [p[1] for p in pairs])
+    return comp, new_ef
+
+
+def decompress_tree(comp):
+    return jax.tree_util.tree_map(
+        decompress, comp, is_leaf=lambda x: isinstance(x, Compressed))

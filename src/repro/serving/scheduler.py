@@ -1,0 +1,161 @@
+"""Continuous-batching serving scheduler.
+
+Production serving keeps the decode batch full: finished requests release
+their slot immediately and queued requests claim it mid-flight (vLLM-style
+iteration-level scheduling). The jit'd ``decode_step`` stays static-shape —
+per-slot state lives in fixed (B, …) buffers and slot turnover is a host-side
+concern plus one masked cache reset.
+
+Pieces:
+  Request        — prompt + max_new_tokens (+ callbacks for streaming)
+  SlotState      — host view of one batch slot
+  ContinuousBatcher — admits/evicts requests, runs prefill (per-slot token
+                   feed) and batched decode ticks, collects outputs.
+
+Single-host implementation (the pjit serve_step drops in for the step
+function at pod scale — the scheduler only touches host metadata).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable, Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import lm
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray                 # (L,) int32
+    max_new_tokens: int = 16
+    on_token: Optional[Callable[[int, int], None]] = None   # (uid, token)
+
+
+@dataclasses.dataclass
+class SlotState:
+    request: Optional[Request] = None
+    generated: List[int] = dataclasses.field(default_factory=list)
+    prompt_pos: int = 0                # tokens of the prompt already fed
+
+    @property
+    def free(self) -> bool:
+        return self.request is None
+
+    @property
+    def prefilling(self) -> bool:
+        return (self.request is not None
+                and self.prompt_pos < len(self.request.prompt))
+
+
+class ContinuousBatcher:
+    """Iteration-level scheduler over a fixed decode batch."""
+
+    def __init__(self, params, cfg: ModelConfig, batch_size: int,
+                 max_len: int, dtype=jnp.float32):
+        self.params = params
+        self.cfg = cfg
+        self.batch = batch_size
+        self.max_len = max_len
+        self.slots = [SlotState() for _ in range(batch_size)]
+        self.queue: Deque[Request] = deque()
+        self.finished: Dict[int, List[int]] = {}
+        self.state = lm.init_decode_state(cfg, batch_size, max_len, dtype)
+        # per-slot position counter (the shared DecodeState.length advances
+        # globally; per-slot validity is tracked by position masks)
+        self.positions = np.zeros(batch_size, np.int32)
+        # ragged decode: every slot advances at its own cache position
+        self._step = jax.jit(
+            lambda p, t, s, l: lm.decode_step(p, cfg, t, s, lengths=l))
+
+    # -- admission ---------------------------------------------------------
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for i, slot in enumerate(self.slots):
+            if slot.free and self.queue:
+                req = self.queue.popleft()
+                self.slots[i] = SlotState(request=req)
+                self._reset_slot_cache(i)
+                self.positions[i] = 0
+
+    def _reset_slot_cache(self, i: int):
+        """Zero slot i's cache/state rows.
+
+        Structural, not shape-matched: lead caches carry batch at axis 0,
+        period caches at axis 1 (after the stacked-periods dim) — guessing
+        by size breaks when num_layers == batch_size."""
+        def zero_at(axis):
+            def f(x):
+                if not hasattr(x, "ndim") or x.ndim <= axis:
+                    return x
+                idx = [slice(None)] * x.ndim
+                idx[axis] = i
+                return x.at[tuple(idx)].set(0)
+            return f
+
+        self.state = lm.DecodeState(
+            jax.tree_util.tree_map(zero_at(0), self.state.lead),
+            jax.tree_util.tree_map(zero_at(1), self.state.period),
+            self.state.length)
+
+    # -- one scheduler tick --------------------------------------------------
+    def tick(self) -> int:
+        """Admit → build the token batch (prompt token for prefilling slots,
+        last generated token for decoding slots) → one decode_step →
+        collect/evict. Returns number of active slots."""
+        self._admit()
+        active = [i for i, s in enumerate(self.slots) if not s.free]
+        if not active:
+            return 0
+        tokens = np.zeros((self.batch, 1), np.int32)
+        was_prefill = [False] * self.batch
+        for i, slot in enumerate(self.slots):
+            if slot.free:
+                continue
+            if slot.prefilling:
+                was_prefill[i] = True
+                tokens[i, 0] = slot.request.prompt[slot.prompt_pos]
+            else:
+                tokens[i, 0] = slot.generated[-1]
+
+        logits, self.state = self._step(self.params, jnp.asarray(tokens),
+                                        self.state,
+                                        jnp.asarray(self.positions))
+        next_tok = np.asarray(
+            jnp.argmax(logits[:, -1, :self.cfg.vocab_size], -1))
+
+        for i, slot in enumerate(self.slots):
+            if slot.free:
+                continue
+            self.positions[i] += 1
+            if was_prefill[i]:
+                slot.prompt_pos += 1
+                if slot.prompt_pos < len(slot.request.prompt):
+                    continue              # mid-prompt: no output yet
+                # the tick that consumed the LAST prompt token produced the
+                # logits of the first generated token — fall through
+            tok = int(next_tok[i])
+            slot.generated.append(tok)
+            if slot.request.on_token:
+                slot.request.on_token(slot.request.uid, tok)
+            done = (len(slot.generated) >= slot.request.max_new_tokens
+                    or self.positions[i] >= self.max_len - 1)
+            if done:
+                self.finished[slot.request.uid] = slot.generated
+                self.slots[i] = SlotState()   # slot freed ⇒ next tick admits
+        return len(active)
+
+    def run_until_drained(self, max_ticks: int = 10_000) -> Dict[int, List[int]]:
+        ticks = 0
+        while (self.queue or any(not s.free for s in self.slots)) \
+                and ticks < max_ticks:
+            self.tick()
+            ticks += 1
+        return self.finished

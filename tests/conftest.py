@@ -1,0 +1,8 @@
+import os
+import sys
+
+# tests see exactly 1 CPU device (the dry-run sets its own 512-device flag
+# in a separate process — never globally)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

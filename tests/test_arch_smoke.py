@@ -1,0 +1,121 @@
+"""Per-architecture smoke tests (deliverable f): every assigned arch
+instantiates a REDUCED config of the same family and runs one forward +
+one train step on CPU, asserting output shapes and no NaNs.
+
+The FULL configs are exercised only via the dry-run (ShapeDtypeStruct,
+no allocation) — see launch/dryrun.py and tests/test_dryrun_small.py."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs as cfglib
+from repro.configs import shapes as shapelib
+from repro.models import lm
+from repro.optim import adamw
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _reduced(name):
+    return cfglib.get_config(name).reduced()
+
+
+def _batch(cfg, b=2, s=16):
+    toks = jax.random.randint(KEY, (b, s), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "labels": toks}
+    if cfg.family == "vlm":
+        batch["prefix_embeds"] = jax.random.normal(
+            KEY, (b, cfg.num_prefix_embeds, cfg.d_model))
+    if cfg.family == "audio":
+        batch["enc_embeds"] = jax.random.normal(KEY, (b, 12, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", cfglib.ARCH_NAMES)
+def test_full_config_is_exact(arch):
+    """The registered config carries the exact assigned hyperparameters."""
+    cfg = cfglib.get_config(arch)
+    spec = {
+        "stablelm-1.6b": (24, 2048, 32, 32, 5632, 100352),
+        "command-r-plus-104b": (64, 12288, 96, 8, 33792, 256000),
+        "qwen3-8b": (36, 4096, 32, 8, 12288, 151936),
+        "starcoder2-15b": (40, 6144, 48, 4, 24576, 49152),
+        "whisper-tiny": (4, 384, 6, 6, 1536, 51865),
+        "qwen3-moe-30b-a3b": (48, 2048, 32, 4, 768, 151936),
+        "kimi-k2-1t-a32b": (61, 7168, 64, 8, 2048, 163840),
+        "rwkv6-3b": (32, 2560, 40, 40, 8960, 65536),
+        "jamba-v0.1-52b": (32, 4096, 32, 8, 14336, 65536),
+        "internvl2-2b": (24, 2048, 16, 8, 8192, 92553),
+    }[arch]
+    got = (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+           cfg.d_ff, cfg.vocab_size)
+    assert got == spec, (got, spec)
+
+
+@pytest.mark.parametrize("arch", cfglib.ARCH_NAMES)
+def test_reduced_forward_and_train_step(arch):
+    cfg = _reduced(arch)
+    prm = lm.init(KEY, cfg)
+    batch = _batch(cfg)
+    logits, aux = lm.forward(prm, cfg, batch["tokens"],
+                             prefix_embeds=batch.get("prefix_embeds"),
+                             enc_embeds=batch.get("enc_embeds"),
+                             remat_policy="none")
+    prefix = cfg.num_prefix_embeds if cfg.family == "vlm" else 0
+    assert logits.shape == (2, 16 + prefix, cfg.padded_vocab)
+    assert not bool(jnp.isnan(logits).any()), "NaN logits"
+
+    # one train step
+    opt_cfg = adamw.AdamWConfig(lr=1e-3)
+    opt = adamw.init(prm, opt_cfg)
+
+    def loss(p):
+        return lm.loss_fn(p, cfg, batch, remat_policy="none")[0]
+
+    l, grads = jax.value_and_grad(loss)(prm)
+    assert np.isfinite(float(l))
+    new_prm, opt, metrics = adamw.update(grads, opt, prm, opt_cfg)
+    assert np.isfinite(float(metrics["grad_norm"]))
+    # params actually changed
+    d0 = jax.tree_util.tree_leaves(prm)[0]
+    d1 = jax.tree_util.tree_leaves(new_prm)[0]
+    assert not np.allclose(np.asarray(d0, np.float32),
+                           np.asarray(d1, np.float32))
+
+
+@pytest.mark.parametrize("arch", cfglib.ARCH_NAMES)
+def test_reduced_decode_step(arch):
+    cfg = _reduced(arch)
+    prm = lm.init(KEY, cfg)
+    state = lm.init_decode_state(cfg, 2, 8, jnp.float32)
+    tok = jax.random.randint(KEY, (2, 1), 0, cfg.vocab_size)
+    enc = None
+    if cfg.family == "audio":
+        enc = jax.random.normal(KEY, (2, 12, cfg.d_model))
+    lg, state = lm.decode_step(prm, cfg, tok, state, enc_out=enc)
+    assert lg.shape == (2, 1, cfg.padded_vocab)
+    assert not bool(jnp.isnan(lg).any())
+    assert int(state.length) == 1
+
+
+@pytest.mark.parametrize("arch", cfglib.ARCH_NAMES)
+def test_input_specs_cover_all_cells(arch):
+    cfg = cfglib.get_config(arch)
+    for shape in shapelib.SHAPE_NAMES:
+        if shapelib.cell_applicable(cfg, shape):
+            continue
+        specs = shapelib.input_specs(cfg, shape)
+        cell = shapelib.SHAPES[shape]
+        assert specs["tokens"].shape[0] == cell.global_batch
+        for sds in specs.values():
+            assert isinstance(sds, jax.ShapeDtypeStruct)
+
+
+def test_long_context_skips_documented():
+    skips = [a for a in cfglib.ARCH_NAMES
+             if shapelib.cell_applicable(cfglib.get_config(a), "long_500k")]
+    runs = [a for a in cfglib.ARCH_NAMES
+            if not shapelib.cell_applicable(cfglib.get_config(a), "long_500k")]
+    assert sorted(runs) == ["jamba-v0.1-52b", "rwkv6-3b"]
+    assert len(skips) == 8

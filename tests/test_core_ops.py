@@ -1,0 +1,130 @@
+"""Core GeoT ops: blocked algorithm vs oracle, autograd, fusion ops."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ops
+from repro.core.config_space import KernelConfig
+
+RNG = np.random.default_rng(0)
+
+
+def _case(m, s, n, dtype=np.float32):
+    idx = np.sort(RNG.integers(0, s, m)).astype(np.int32)
+    x = RNG.standard_normal((m, n)).astype(dtype)
+    return jnp.asarray(x), jnp.asarray(idx)
+
+
+CASES = [(1000, 100, 32), (517, 50, 7), (2048, 3, 128), (64, 64, 1),
+         (300, 290, 16), (1, 1, 5), (128, 1, 64)]
+
+
+@pytest.mark.parametrize("m,s,n", CASES)
+@pytest.mark.parametrize("sched", ["SR", "PR"])
+def test_blocked_matches_ref_sum(m, s, n, sched):
+    x, idx = _case(m, s, n)
+    ref = ops.segment_reduce(x, idx, s, "sum", "ref")
+    for mb in (64, 256):
+        cfg = KernelConfig(sched, 128, 128, mb, 8)
+        out = ops.segment_reduce(x, idx, s, "sum", "blocked", cfg)
+        np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("reduce", ["mean", "max"])
+def test_blocked_mean_max(reduce):
+    x, idx = _case(777, 91, 9)
+    ref = ops.segment_reduce(x, idx, 91, reduce, "ref")
+    out = ops.segment_reduce(x, idx, 91, reduce, "blocked",
+                             KernelConfig("SR", 128, 128, 128, 1))
+    np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+
+def test_index_segment_reduce_matches_compose():
+    h = jnp.asarray(RNG.standard_normal((40, 16)).astype(np.float32))
+    gidx = jnp.asarray(RNG.integers(0, 40, 200).astype(np.int32))
+    seg = jnp.asarray(np.sort(RNG.integers(0, 30, 200)).astype(np.int32))
+    fused = ops.index_segment_reduce(h, gidx, seg, 30)
+    composed = ops.segment_reduce(jnp.take(h, gidx, axis=0), seg, 30)
+    np.testing.assert_allclose(fused, composed, rtol=1e-6)
+
+
+def test_index_weight_segment_reduce_is_spmm():
+    """The fused weighted op == dense A @ H with A the COO matrix (§IV)."""
+    v, s, m, n = 30, 25, 150, 8
+    h = RNG.standard_normal((v, n)).astype(np.float32)
+    gidx = RNG.integers(0, v, m).astype(np.int32)
+    seg = np.sort(RNG.integers(0, s, m)).astype(np.int32)
+    w = RNG.standard_normal(m).astype(np.float32)
+    a = np.zeros((s, v), np.float32)
+    for i in range(m):
+        a[seg[i], gidx[i]] += w[i]
+    want = a @ h
+    got = ops.index_weight_segment_reduce(
+        jnp.asarray(h), jnp.asarray(gidx), jnp.asarray(w), jnp.asarray(seg), s)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("reduce", ["sum", "mean", "max"])
+def test_segment_reduce_grad(reduce):
+    x, idx = _case(200, 40, 8)
+
+    def f(x):
+        return jnp.sum(jnp.sin(ops.segment_reduce(x, idx, 40, reduce)))
+
+    def f_ref(x):
+        from repro.kernels import ref
+        return jnp.sum(jnp.sin(ref.segment_reduce(x, idx, 40, reduce)))
+
+    g = jax.grad(f)(x)
+    g_ref = jax.grad(f_ref)(x)
+    np.testing.assert_allclose(g, g_ref, rtol=1e-4, atol=1e-5)
+
+
+def test_fused_op_grads_match_reference():
+    v, s, m, n = 25, 20, 120, 6
+    h = jnp.asarray(RNG.standard_normal((v, n)).astype(np.float32))
+    gidx = jnp.asarray(RNG.integers(0, v, m).astype(np.int32))
+    seg = jnp.asarray(np.sort(RNG.integers(0, s, m)).astype(np.int32))
+    w = jnp.asarray(RNG.standard_normal(m).astype(np.float32))
+
+    def f(h, w):
+        y = ops.index_weight_segment_reduce(h, gidx, w, seg, s)
+        return jnp.sum(y ** 2)
+
+    def f_ref(h, w):
+        y = jax.ops.segment_sum(h[gidx] * w[:, None], seg, s)
+        return jnp.sum(y ** 2)
+
+    for got, want in zip(jax.grad(f, (0, 1))(h, w),
+                         jax.grad(f_ref, (0, 1))(h, w)):
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_segment_softmax_normalizes():
+    x, idx = _case(300, 40, 1)
+    p = ops.segment_softmax(x[:, 0], idx, 40)
+    sums = jax.ops.segment_sum(p, idx, 40, indices_are_sorted=True)
+    live = np.unique(np.asarray(idx))
+    np.testing.assert_allclose(np.asarray(sums)[live], 1.0, rtol=1e-5)
+
+
+def test_sddmm():
+    h1 = RNG.standard_normal((20, 8)).astype(np.float32)
+    h2 = RNG.standard_normal((30, 8)).astype(np.float32)
+    r = RNG.integers(0, 20, 50).astype(np.int32)
+    c = RNG.integers(0, 30, 50).astype(np.int32)
+    got = ops.sddmm(jnp.asarray(h1), jnp.asarray(h2), jnp.asarray(r),
+                    jnp.asarray(c))
+    want = np.einsum("ed,ed->e", h1[r], h2[c])
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+def test_segment_matmul_matches_ragged_dot():
+    m, k, n, e = 96, 16, 24, 5
+    sizes = RNG.multinomial(m, np.ones(e) / e).astype(np.int32)
+    x = jnp.asarray(RNG.standard_normal((m, k)).astype(np.float32))
+    w = jnp.asarray(RNG.standard_normal((e, k, n)).astype(np.float32))
+    got = ops.segment_matmul(x, jnp.asarray(sizes), w)
+    want = jax.lax.ragged_dot(x, w, jnp.asarray(sizes))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)

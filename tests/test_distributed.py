@@ -1,0 +1,17 @@
+"""Multi-device integration: runs tests/_distributed_checks.py in a
+subprocess with 8 host devices (the main pytest process keeps 1 device)."""
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.timeout(900)
+def test_distributed_checks_subprocess():
+    script = pathlib.Path(__file__).parent / "_distributed_checks.py"
+    out = subprocess.run([sys.executable, str(script)], capture_output=True,
+                         text=True, timeout=880,
+                         cwd=pathlib.Path(__file__).parents[1])
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    assert "ALL DISTRIBUTED CHECKS OK" in out.stdout

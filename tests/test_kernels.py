@@ -1,0 +1,125 @@
+"""Pallas kernels vs pure-jnp oracles (interpret=True): shape/dtype sweeps
+per kernel, as required for every kernel in kernels/."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.config_space import KernelConfig
+from repro.kernels import ops as kops, ref
+
+RNG = np.random.default_rng(7)
+
+SHAPES = [(260, 40, 17), (1000, 100, 32), (64, 64, 1), (512, 3, 130),
+          (130, 128, 64)]
+DTYPES = [np.float32, jnp.bfloat16]
+SCHEDS = ["PR", "SR"]
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=3e-4, atol=3e-4)
+
+
+@pytest.mark.parametrize("m,s,n", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("sched", SCHEDS)
+def test_segment_reduce_kernel(m, s, n, dtype, sched):
+    idx = np.sort(RNG.integers(0, s, m)).astype(np.int32)
+    x = jnp.asarray(RNG.standard_normal((m, n)), dtype)
+    cfg = KernelConfig(sched, 64, 128, 128, 8)
+    got = kops.segment_reduce(x, jnp.asarray(idx), s, "sum", cfg,
+                              interpret=True)
+    want = ref.segment_reduce(x.astype(jnp.float32), jnp.asarray(idx), s)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want), **_tol(dtype))
+
+
+@pytest.mark.parametrize("reduce", ["mean", "max"])
+def test_segment_reduce_kernel_mean_max(reduce):
+    m, s, n = 300, 37, 24
+    idx = np.sort(RNG.integers(0, s, m)).astype(np.int32)
+    x = jnp.asarray(RNG.standard_normal((m, n)), jnp.float32)
+    got = kops.segment_reduce(x, jnp.asarray(idx), s, reduce,
+                              KernelConfig("SR", 64, 128, 64, 1),
+                              interpret=True)
+    want = ref.segment_reduce(x, jnp.asarray(idx), s, reduce)
+    ga, wa = np.asarray(got), np.asarray(want)
+    mask = np.isfinite(wa)
+    assert np.array_equal(np.isfinite(ga), mask)
+    np.testing.assert_allclose(ga[mask], wa[mask], rtol=3e-4, atol=3e-4)
+
+
+def test_segment_reduce_kernel_empty_segments():
+    """Gapped ids: many empty segments between occupied ones."""
+    m, s = 200, 500
+    idx = np.sort(RNG.choice(np.arange(0, s, 7), m)).astype(np.int32)
+    x = jnp.asarray(RNG.standard_normal((m, 16)), jnp.float32)
+    for sched in SCHEDS:
+        got = kops.segment_reduce(x, jnp.asarray(idx), s, "sum",
+                                  KernelConfig(sched, 64, 128, 64, 8),
+                                  interpret=True)
+        want = ref.segment_reduce(x, jnp.asarray(idx), s)
+        np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)
+
+
+@pytest.mark.parametrize("weighted", [False, True])
+@pytest.mark.parametrize("sched", SCHEDS)
+def test_gather_segment_reduce_kernel(weighted, sched):
+    m, v, s, n = 400, 90, 60, 20
+    seg = np.sort(RNG.integers(0, s, m)).astype(np.int32)
+    gidx = RNG.integers(0, v, m).astype(np.int32)
+    w = jnp.asarray(RNG.standard_normal(m), jnp.float32) if weighted else None
+    h = jnp.asarray(RNG.standard_normal((v, n)), jnp.float32)
+    cfg = KernelConfig(sched, 64, 128, 128, 8)
+    got = kops.gather_segment_reduce(h, jnp.asarray(gidx), jnp.asarray(seg),
+                                     s, weight=w, config=cfg, interpret=True)
+    want = ref.gather_segment_reduce(h, jnp.asarray(gidx), jnp.asarray(seg),
+                                     s, weight=w)
+    np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)
+
+
+@pytest.mark.parametrize("m,k,n,e", [(130, 16, 16, 3), (300, 64, 48, 4),
+                                     (512, 32, 130, 7), (96, 8, 8, 96)])
+def test_segment_matmul_kernel(m, k, n, e):
+    sizes = RNG.multinomial(m, np.ones(e) / e).astype(np.int32)
+    x = jnp.asarray(RNG.standard_normal((m, k)), jnp.float32)
+    w = jnp.asarray(RNG.standard_normal((e, k, n)), jnp.float32)
+    got = kops.segment_matmul(x, jnp.asarray(sizes), w, interpret=True)
+    want = ref.segment_matmul(x, jnp.asarray(sizes), w)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_segment_matmul_kernel_empty_groups():
+    m, k, n, e = 128, 8, 8, 6
+    sizes = np.array([0, 64, 0, 0, 64, 0], np.int32)
+    x = jnp.asarray(RNG.standard_normal((m, k)), jnp.float32)
+    w = jnp.asarray(RNG.standard_normal((e, k, n)), jnp.float32)
+    got = kops.segment_matmul(x, jnp.asarray(sizes), w, interpret=True)
+    want = ref.segment_matmul(x, jnp.asarray(sizes), w)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("ra,rb,m,n", [(40, 60, 300, 16), (100, 100, 513, 64),
+                                       (20, 30, 64, 130)])
+def test_sddmm_kernel(ra, rb, m, n):
+    """SDDMM (paper §VI — the SpMM backward) vs the per-edge-dot oracle."""
+    from repro.core import ops as core_ops
+    a = jnp.asarray(RNG.standard_normal((ra, n)), jnp.float32)
+    b = jnp.asarray(RNG.standard_normal((rb, n)), jnp.float32)
+    ri = jnp.asarray(RNG.integers(0, ra, m).astype(np.int32))
+    ci = jnp.asarray(RNG.integers(0, rb, m).astype(np.int32))
+    got = kops.sddmm(a, b, ri, ci, interpret=True)
+    want = core_ops.sddmm(a, b, ri, ci)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_kernel_respects_generated_rules():
+    """config=None routes through the data-aware generated rules."""
+    m, s, n = 500, 50, 8
+    idx = np.sort(RNG.integers(0, s, m)).astype(np.int32)
+    x = jnp.asarray(RNG.standard_normal((m, n)), jnp.float32)
+    got = kops.segment_reduce(x, jnp.asarray(idx), s, interpret=True)
+    want = ref.segment_reduce(x, jnp.asarray(idx), s)
+    np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)

@@ -1,0 +1,119 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ops
+from repro.core.config_space import KernelConfig, all_configs
+from repro.core.features import InputFeatures
+from repro.core.heuristics import select_config
+
+SET = settings(max_examples=25, deadline=None)
+
+
+@st.composite
+def segment_problem(draw):
+    m = draw(st.integers(1, 400))
+    s = draw(st.integers(1, 80))
+    n = draw(st.integers(1, 40))
+    seed = draw(st.integers(0, 2 ** 16))
+    rng = np.random.default_rng(seed)
+    idx = np.sort(rng.integers(0, s, m)).astype(np.int32)
+    x = rng.standard_normal((m, n)).astype(np.float32)
+    return jnp.asarray(x), jnp.asarray(idx), s
+
+
+@SET
+@given(segment_problem(), st.sampled_from(["SR", "PR"]),
+       st.sampled_from([64, 128, 256]))
+def test_blocked_equals_oracle(problem, sched, mb):
+    x, idx, s = problem
+    cfg = KernelConfig(sched, 128, 128, mb, 8)
+    got = ops.segment_reduce(x, idx, s, "sum", "blocked", cfg)
+    want = jax.ops.segment_sum(x, idx, s, indices_are_sorted=True)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+@SET
+@given(segment_problem(), st.floats(-2.0, 2.0), st.floats(-2.0, 2.0))
+def test_linearity(problem, a, b):
+    """segment_reduce(a·x + b·y) == a·SR(x) + b·SR(y)."""
+    x, idx, s = problem
+    y = x[::-1].copy() if x.shape[0] > 1 else x
+    lhs = ops.segment_reduce(a * x + b * y, idx, s)
+    rhs = a * ops.segment_reduce(x, idx, s) + b * ops.segment_reduce(y, idx, s)
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-3, atol=1e-3)
+
+
+@SET
+@given(segment_problem(), st.integers(0, 2 ** 16))
+def test_permutation_within_segments_invariance(problem, seed):
+    """Shuffling rows *within* each segment leaves the sum unchanged."""
+    x, idx, s = problem
+    rng = np.random.default_rng(seed)
+    idx_np = np.asarray(idx)
+    perm = np.arange(idx_np.size)
+    for seg in np.unique(idx_np):
+        rows = np.where(idx_np == seg)[0]
+        perm[rows] = rng.permutation(rows)
+    got = ops.segment_reduce(jnp.asarray(np.asarray(x)[perm]),
+                             jnp.asarray(idx_np[perm]), s)
+    want = ops.segment_reduce(x, idx, s)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@SET
+@given(segment_problem())
+def test_mean_times_count_equals_sum(problem):
+    x, idx, s = problem
+    mean = ops.segment_reduce(x, idx, s, "mean")
+    total = ops.segment_reduce(x, idx, s, "sum")
+    cnt = jax.ops.segment_sum(jnp.ones((x.shape[0],)), idx, s,
+                              indices_are_sorted=True)
+    np.testing.assert_allclose(mean * jnp.maximum(cnt, 1.0)[:, None], total,
+                               rtol=1e-4, atol=1e-4)
+
+
+@SET
+@given(segment_problem())
+def test_sum_conservation(problem):
+    """Σ_s Y[s] == Σ_i X[i] — reduction conserves mass."""
+    x, idx, s = problem
+    y = ops.segment_reduce(x, idx, s)
+    np.testing.assert_allclose(jnp.sum(y, 0), jnp.sum(x, 0),
+                               rtol=1e-3, atol=1e-3)
+
+
+@SET
+@given(segment_problem())
+def test_gather_vjp_roundtrip(problem):
+    """<gather(h), g> == <h, scatter(g)> — adjointness of the VJP pair."""
+    x, idx, s = problem
+    rng = np.random.default_rng(1)
+    h = jnp.asarray(rng.standard_normal((s, x.shape[1])).astype(np.float32))
+    g = x
+    lhs = jnp.sum(ops.gather(h, idx) * g)
+    dh = jax.grad(lambda h: jnp.sum(ops.gather(h, idx) * g))(h)
+    rhs = jnp.sum(h * dh) / 1.0
+    # adjointness: dh == scatter-add(g) so <h, dh> == <gather(h), g>
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-3, atol=1e-3)
+
+
+@SET
+@given(st.integers(1, 10 ** 8), st.integers(1, 10 ** 6), st.integers(1, 512))
+def test_selected_config_always_valid(m, s, f):
+    """The generated rules always emit a VMEM-feasible pruned-space config."""
+    cfg = select_config(m, s, f)
+    assert cfg.schedule in ("SR", "PR")
+    assert cfg.vmem_bytes() <= 16 * 1024 * 1024
+    valid = {c.astuple() for c in all_configs()}
+    assert cfg.astuple() in valid
+
+
+@SET
+@given(st.integers(1, 10 ** 8), st.integers(1, 10 ** 6), st.integers(1, 512))
+def test_features_o1(m, s, f):
+    feats = InputFeatures(m, s, f)
+    v = feats.as_vector()
+    assert v.shape == (3,) and np.all(np.isfinite(v))
