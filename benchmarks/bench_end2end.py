@@ -18,6 +18,7 @@ import numpy as np
 from jax.experimental import sparse as jsparse
 
 from benchmarks.common import emit, geomean, timeit
+from repro.core.plan import make_graph_plan
 from repro.data.graphs import dataset
 from repro.models import gnn
 
@@ -75,14 +76,19 @@ def run(quick: bool = False):
             y = (coo if weighted else coo_u) @ h
             return y / deg[:, None] if mean else y
 
+        # one plan per graph, shared by every layer / model / hidden width
+        plan = make_graph_plan(g.edge_index, v, feat=max(HIDDEN))
+
         def agg_geot(h, weighted=False, mean=False):
             from repro.core import ops
             if weighted:
                 return ops.index_weight_segment_reduce(h, src, w, dst, v,
-                                                       impl="blocked")
+                                                       impl="blocked",
+                                                       plan=plan)
             return ops.index_segment_reduce(
                 h, src, dst, v, reduce="mean" if mean else "sum",
-                impl="blocked" if not mean else "ref")
+                impl="blocked" if not mean else "ref",
+                plan=plan if not mean else None)
 
         def agg_dense(h, weighted=False, mean=False):
             y = dense_a @ h if weighted else (dense_a != 0) @ h

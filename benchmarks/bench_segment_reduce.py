@@ -9,16 +9,25 @@ Baselines (CPU/XLA analogues of the paper's):
 
 derived column: speedup_vs_scatter | cost-model v5e GFlops for the
 tree-selected config.
+
+``geot_planned`` rows reuse a precomputed SegmentPlan (schedule metadata +
+config built once per graph — the amortized hot path); CLI smoke mode
+(``python benchmarks/bench_segment_reduce.py --smoke``) writes a
+``BENCH_segment_reduce.json`` artifact for CI to upload.
 """
 from __future__ import annotations
+
+import argparse
+import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, geomean, timeit
+from benchmarks.common import emit, geomean, timeit, write_json
 from repro.core import costmodel, ops
 from repro.core.heuristics import hand_crafted_config, select_config
+from repro.core.plan import make_plan
 from repro.data.graphs import dataset
 
 # reddit2 excluded (paper §V-B: OOM in the original too); the two largest
@@ -51,7 +60,10 @@ def run(quick: bool = False):
             # MXU-shaped — emulating it on CPU costs S_b× extra MACs); the
             # tree config still drives the v5e cost-model `derived` column.
             from repro.core.config_space import KernelConfig
-            cpu = lambda c: KernelConfig("SR", c.s_b, c.n_b, c.m_b, 1)
+
+            def cpu(c):
+                return KernelConfig("SR", c.s_b, c.n_b, c.m_b, 1)
+
             geot = jax.jit(lambda x: ops.segment_reduce(
                 x, dst, v, "sum", "blocked", cpu(cfg_tree)))
             geot_hand = jax.jit(lambda x: ops.segment_reduce(
@@ -61,6 +73,15 @@ def run(quick: bool = False):
             t_coo = timeit(coo, x, reps=3)
             t_geot = timeit(geot, x, reps=3)
             t_hand = timeit(geot_hand, x, reps=3)
+
+            # plan build cost + the grid tightening the planned Pallas
+            # kernel would get on this graph (the planned-vs-planless
+            # *kernel* comparison itself lives in run_smoke — the blocked
+            # XLA path consumes no grid, so timing it with a plan would
+            # measure nothing plan-specific)
+            t0 = time.perf_counter()
+            plan = make_plan(np.asarray(dst), v, feat=f, config=cpu(cfg_tree))
+            t_plan_build = (time.perf_counter() - t0) * 1e6
 
             cost = costmodel.segment_reduce_cost(m, v, f, cfg_tree)
             gflops = cost.gflops(costmodel.useful_flops(m, f))
@@ -73,8 +94,69 @@ def run(quick: bool = False):
                  f"{sp:.2f}x|v5e_model={gflops:.1f}GFLOPs")
             emit(f"fig6/{name}/F{f}/geot_hand", t_hand,
                  f"{t_scatter / t_hand:.2f}x")
+            emit(f"fig6/{name}/F{f}/plan_build", t_plan_build,
+                 f"grid={plan.max_chunks}/{plan.worst_case_chunks}"
+                 f"|{plan.grid_savings:.1f}x_tighter")
     emit("fig6/geomean_speedup_vs_scatter", 0.0, f"{geomean(speedups):.2f}x")
 
 
+def run_smoke():
+    """CI-scale smoke: one small graph, planned Pallas (interpret) vs refs.
+
+    Exercises the real kernel path — tight grid from the plan — at sizes
+    where the interpreter stays in seconds, and records the plan's grid
+    tightening so the CI artifact tracks it over time."""
+    from repro.core.config_space import KernelConfig
+
+    g = dataset("cora", feat=1, scale=0.25)
+    dst = jnp.asarray(g.edge_index[1])
+    m, v, f = g.num_edges, g.num_nodes, 16
+    x = jnp.asarray(
+        np.random.default_rng(0).standard_normal((m, f), np.float32))
+    cfg = KernelConfig("SR", 64, 128, 64, 1)
+    plan = make_plan(g.edge_index[1], v, feat=f, config=cfg)
+
+    coo = jax.jit(lambda x: jax.ops.segment_sum(
+        x, dst, v, indices_are_sorted=True))
+    blocked = jax.jit(lambda x: ops.segment_reduce(
+        x, dst, v, "sum", "blocked", None, plan))
+    pallas_planned = jax.jit(lambda x: ops.segment_reduce(
+        x, dst, v, "sum", "pallas", None, plan))
+    pallas_planless = jax.jit(lambda x: ops.segment_reduce(
+        x, dst, v, "sum", "pallas", cfg))
+
+    t_coo = timeit(coo, x, reps=3, warmup=1)
+    t_blk = timeit(blocked, x, reps=3, warmup=1)
+    t_pal = timeit(pallas_planned, x, reps=3, warmup=1)
+    t_pll = timeit(pallas_planless, x, reps=3, warmup=1)
+    emit("smoke/segment_coo", t_coo, "1.00x")
+    emit("smoke/geot_blocked_planned", t_blk, f"{t_coo / t_blk:.2f}x")
+    emit("smoke/geot_pallas_planned", t_pal,
+         f"grid={plan.max_chunks}/{plan.worst_case_chunks}"
+         f"|{plan.grid_savings:.1f}x_tighter")
+    emit("smoke/geot_pallas_planless", t_pll,
+         f"planned_speedup={t_pll / t_pal:.2f}x")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI run; implies --json BENCH_segment_reduce.json")
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", default=None,
+                    help="write emitted rows to this JSON artifact")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    if args.smoke:
+        run_smoke()
+    else:
+        run(quick=args.quick)
+    json_path = args.json or ("BENCH_segment_reduce.json" if args.smoke
+                              else None)
+    if json_path:
+        write_json(json_path, bench="segment_reduce",
+                   mode="smoke" if args.smoke else "full")
+
+
 if __name__ == "__main__":
-    run()
+    main()

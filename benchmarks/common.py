@@ -6,12 +6,15 @@ v5e numbers (cost model / speedups) that transfer to the target hardware.
 """
 from __future__ import annotations
 
+import json
+import platform
 import time
-from typing import Callable, List
+from typing import Callable, Dict, List
 
 import jax
 
 ROWS: List[str] = []
+RECORDS: List[Dict] = []
 
 
 def timeit(fn: Callable, *args, reps: int = 5, warmup: int = 2) -> float:
@@ -30,7 +33,26 @@ def timeit(fn: Callable, *args, reps: int = 5, warmup: int = 2) -> float:
 def emit(name: str, us: float, derived: str = ""):
     row = f"{name},{us:.1f},{derived}"
     ROWS.append(row)
+    RECORDS.append({"name": name, "us": round(us, 1), "derived": derived})
     print(row, flush=True)
+
+
+def write_json(path: str, **meta) -> None:
+    """Dump every emitted row (plus environment metadata) as a benchmark
+    artifact — CI uploads these so the perf trajectory accumulates per PR."""
+    doc = {
+        "meta": {
+            "backend": jax.default_backend(),
+            "jax": jax.__version__,
+            "python": platform.python_version(),
+            "machine": platform.machine(),
+            **meta,
+        },
+        "rows": RECORDS,
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+    print(f"wrote {path} ({len(RECORDS)} rows)", flush=True)
 
 
 def geomean(xs):

@@ -7,6 +7,12 @@ Public API (paper §II-B, §IV):
 from repro.core.config_space import KernelConfig, all_configs, default_config
 from repro.core.features import InputFeatures, extract_features
 from repro.core.heuristics import hand_crafted_config, select_config
+from repro.core.plan import (
+    SegmentPlan,
+    SegmentStats,
+    make_graph_plan,
+    make_plan,
+)
 from repro.core.ops import (
     gather,
     index_segment_reduce,
@@ -21,6 +27,7 @@ __all__ = [
     "KernelConfig", "all_configs", "default_config",
     "InputFeatures", "extract_features",
     "select_config", "hand_crafted_config",
+    "SegmentPlan", "SegmentStats", "make_plan", "make_graph_plan",
     "segment_reduce", "index_segment_reduce", "index_weight_segment_reduce",
     "segment_softmax", "segment_matmul", "sddmm", "gather",
 ]

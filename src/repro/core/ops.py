@@ -149,16 +149,18 @@ def _segment_reduce_blocked(x, idx, num_segments: int, reduce: str,
 # Public ops with custom VJPs
 # ---------------------------------------------------------------------------
 
-def _dispatch_segment_reduce(x, idx, num_segments, reduce, impl, config):
+def _dispatch_segment_reduce(x, idx, num_segments, reduce, impl, config,
+                             plan=None):
     if impl == "ref":
         return _segment_reduce_ref(x, idx, num_segments, reduce)
     if impl == "blocked":
-        cfg = config or _auto_config(idx, num_segments, x.shape[-1])
+        cfg = (config or (plan.config if plan is not None else None)
+               or _auto_config(idx, num_segments, x.shape[-1]))
         return _segment_reduce_blocked(x, idx, num_segments, reduce, cfg)
     if impl == "pallas":
         from repro.kernels import ops as kops
         return kops.segment_reduce(x, idx, num_segments, reduce=reduce,
-                                   config=config)
+                                   config=config, plan=plan)
     raise ValueError(f"unknown impl: {impl}")
 
 
@@ -169,15 +171,21 @@ def _auto_config(idx, num_segments, feat) -> KernelConfig:
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
 def segment_reduce(x, idx, num_segments: int, reduce: str = "sum",
-                   impl: str = "ref", config: Optional[KernelConfig] = None):
+                   impl: str = "ref", config: Optional[KernelConfig] = None,
+                   plan=None):
     """Y[s, :] = reduce_{i : idx[i] == s} X[i, :]   (paper Fig. 2).
 
-    idx must be sorted non-decreasing. Differentiable (sum/mean/max)."""
-    return _dispatch_segment_reduce(x, idx, num_segments, reduce, impl, config)
+    idx must be sorted non-decreasing. Differentiable (sum/mean/max).
+    ``plan``: precomputed :class:`repro.core.plan.SegmentPlan` over ``idx``;
+    supplies the config and, for ``impl="pallas"``, the chunk metadata and a
+    tight grid bound (built once per graph, reused across calls)."""
+    return _dispatch_segment_reduce(x, idx, num_segments, reduce, impl,
+                                    config, plan)
 
 
-def _segment_reduce_fwd(x, idx, num_segments, reduce, impl, config):
-    y = _dispatch_segment_reduce(x, idx, num_segments, reduce, impl, config)
+def _segment_reduce_fwd(x, idx, num_segments, reduce, impl, config, plan=None):
+    y = _dispatch_segment_reduce(x, idx, num_segments, reduce, impl, config,
+                                 plan)
     if reduce == "max":
         res = (idx, x, y)
     elif reduce == "mean":
@@ -192,14 +200,14 @@ def _segment_reduce_fwd(x, idx, num_segments, reduce, impl, config):
 def _segment_reduce_bwd(num_segments, reduce, impl, config, res, y_bar):
     if reduce == "sum":
         (idx,) = res
-        return (jnp.take(y_bar, idx, axis=0), None)
+        return (jnp.take(y_bar, idx, axis=0), None, None)
     if reduce == "mean":
         idx, cnt = res
         scale = 1.0 / jnp.maximum(cnt, 1.0)
-        return (jnp.take(y_bar * scale[:, None], idx, axis=0), None)
+        return (jnp.take(y_bar * scale[:, None], idx, axis=0), None, None)
     idx, x, y = res
     winner = (x == jnp.take(y, idx, axis=0)).astype(y_bar.dtype)
-    return (winner * jnp.take(y_bar, idx, axis=0), None)
+    return (winner * jnp.take(y_bar, idx, axis=0), None, None)
 
 
 segment_reduce.defvjp(_segment_reduce_fwd, _segment_reduce_bwd)
@@ -235,26 +243,44 @@ _gather.defvjp(_gather_fwd, _gather_bwd)
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
 def index_segment_reduce(h, gather_idx, seg_idx, num_segments: int,
                          reduce: str = "sum", impl: str = "ref",
-                         config: Optional[KernelConfig] = None):
+                         config: Optional[KernelConfig] = None, plan=None):
     """Fused message+aggregate (paper Listing 2, §IV):
 
         Y[s] = reduce_{i: seg_idx[i]==s} H[gather_idx[i]]
 
     Equivalent to ``segment_reduce(H[gather_idx], seg_idx)`` but fused so the
     (|E|, N) message tensor never hits DRAM (format-agnostic SpMM with unit
-    weights)."""
+    weights). ``plan``: precomputed SegmentPlan over ``seg_idx``."""
     if impl == "pallas":
         from repro.kernels import ops as kops
-        return kops.gather_segment_reduce(h, gather_idx, seg_idx, num_segments,
-                                          reduce=reduce, config=config)
+        if reduce == "sum":
+            return kops.gather_segment_reduce(h, gather_idx, seg_idx,
+                                              num_segments, config=config,
+                                              plan=plan)
+        if reduce == "mean":
+            # fused sum + count normalization (schedule unchanged, paper §VI)
+            s = kops.gather_segment_reduce(h, gather_idx, seg_idx,
+                                           num_segments, config=config,
+                                           plan=plan)
+            cnt = jax.ops.segment_sum(
+                jnp.ones((seg_idx.shape[0],), jnp.float32), seg_idx,
+                num_segments, indices_are_sorted=True)
+            return (s.astype(jnp.float32)
+                    / jnp.maximum(cnt, 1.0)[:, None]).astype(h.dtype)
+        # max: no fused path — gather then blocked-SR max kernel
+        msg = jnp.take(h, gather_idx, axis=0)
+        return kops.segment_reduce(msg, seg_idx, num_segments, reduce=reduce,
+                                   config=config, plan=plan)
     msg = jnp.take(h, gather_idx, axis=0)
     return _dispatch_segment_reduce(msg, seg_idx, num_segments, reduce,
-                                    "ref" if impl == "ref" else impl, config)
+                                    "ref" if impl == "ref" else impl, config,
+                                    plan)
 
 
-def _isr_fwd(h, gather_idx, seg_idx, num_segments, reduce, impl, config):
+def _isr_fwd(h, gather_idx, seg_idx, num_segments, reduce, impl, config,
+             plan=None):
     y = index_segment_reduce(h, gather_idx, seg_idx, num_segments, reduce,
-                             impl, config)
+                             impl, config, plan)
     return y, (h, gather_idx, seg_idx, y)
 
 
@@ -271,7 +297,7 @@ def _isr_bwd(num_segments, reduce, impl, config, res, y_bar):
         winner = (msg == jnp.take(y, seg_idx, axis=0)).astype(y_bar.dtype)
         g_edges = winner * jnp.take(y_bar, seg_idx, axis=0)
     dh = jnp.zeros_like(h).at[gather_idx].add(g_edges)
-    return (dh, None, None)
+    return (dh, None, None, None)
 
 
 index_segment_reduce.defvjp(_isr_fwd, _isr_bwd)
@@ -280,25 +306,30 @@ index_segment_reduce.defvjp(_isr_fwd, _isr_bwd)
 @functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
 def index_weight_segment_reduce(h, gather_idx, weight, seg_idx,
                                 num_segments: int, impl: str = "ref",
-                                config: Optional[KernelConfig] = None):
+                                config: Optional[KernelConfig] = None,
+                                plan=None):
     """Weighted fused message+aggregate ≡ SpMM (paper §IV):
 
         Y[s] = Σ_{i: seg_idx[i]==s} w[i] * H[gather_idx[i]]
 
     With (seg_idx, gather_idx, w) a sorted COO sparse matrix A, this is
-    Y = A @ H — cuSPARSE's workload, format-agnostic."""
+    Y = A @ H — cuSPARSE's workload, format-agnostic. ``plan``: precomputed
+    SegmentPlan over ``seg_idx``."""
     if impl == "pallas":
         from repro.kernels import ops as kops
         return kops.gather_segment_reduce(h, gather_idx, seg_idx, num_segments,
-                                          weight=weight, config=config)
+                                          weight=weight, config=config,
+                                          plan=plan)
     msg = jnp.take(h, gather_idx, axis=0) * weight[:, None].astype(h.dtype)
     return _dispatch_segment_reduce(msg, seg_idx, num_segments, "sum",
-                                    "ref" if impl == "ref" else impl, config)
+                                    "ref" if impl == "ref" else impl, config,
+                                    plan)
 
 
-def _iwsr_fwd(h, gather_idx, weight, seg_idx, num_segments, impl, config):
+def _iwsr_fwd(h, gather_idx, weight, seg_idx, num_segments, impl, config,
+              plan=None):
     y = index_weight_segment_reduce(h, gather_idx, weight, seg_idx,
-                                    num_segments, impl, config)
+                                    num_segments, impl, config, plan)
     return y, (h, gather_idx, weight, seg_idx)
 
 
@@ -310,7 +341,7 @@ def _iwsr_bwd(num_segments, impl, config, res, y_bar):
     # dW = SDDMM: per-edge dot of gathered rows (paper §VI)
     dw = jnp.sum(jnp.take(h, gather_idx, axis=0).astype(y_bar.dtype) * g_seg,
                  axis=-1).astype(weight.dtype)
-    return (dh, None, dw, None)
+    return (dh, None, dw, None, None)
 
 
 index_weight_segment_reduce.defvjp(_iwsr_fwd, _iwsr_bwd)

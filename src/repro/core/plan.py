@@ -1,0 +1,187 @@
+"""Precomputed reduction plans (GeoT §III-C data-awareness, amortized).
+
+A :class:`SegmentPlan` captures, *once per graph*, everything the Pallas
+segment-reduction kernels otherwise derive on every call:
+
+  * ``chunk_first`` / ``chunk_count`` — the per-output-block chunk range over
+    the padded input-row space (the scalar-prefetched schedule metadata);
+  * a **tight** ``max_chunks`` — the maximum number of input chunks actually
+    owned by any output block. The plan-less path must assume the worst case
+    (``m_pad // m_b``: one block owns every row), so the kernel grid's chunk
+    dimension is O(M / m_b); with a plan it is O(actual skew);
+  * degree statistics of the segment index (for the data-aware heuristic /
+    decision-tree config selection, paper Fig. 5);
+  * the selected :class:`~repro.core.config_space.KernelConfig`.
+
+Plans are registered pytrees: the chunk arrays are leaves (device arrays,
+jit/vmap/grad-transparent) while sizes, the config, and the statistics are
+static aux data — so a plan threads through ``jax.jit`` boundaries without
+retriggering compilation as long as the *schedule* is unchanged.
+
+Build a plan with :func:`make_plan` (raw sorted index) or
+:func:`make_graph_plan` (``edge_index`` convention of the GNN stack), then
+pass it to ``segment_reduce`` / ``index_segment_reduce`` /
+``index_weight_segment_reduce`` via ``plan=``. FASTEN (ICS'24) measures that
+exactly this amortization — metadata built once, reused across layers and
+training steps — is where fused segment ops win end-to-end; see
+``docs/plans.md``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.config_space import KernelConfig
+
+__all__ = ["SegmentStats", "SegmentPlan", "make_plan", "make_graph_plan"]
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+@dataclasses.dataclass(frozen=True)
+class SegmentStats:
+    """O(|V|) degree statistics of a sorted segment index (static metadata)."""
+    num_rows: int            # M = |E| (index length)
+    num_segments: int        # S (output rows)
+    live_segments: int       # segments with >= 1 row (gapped ids shrink this)
+    max_degree: int          # heaviest segment
+    avg_degree: float        # M / max(live_segments, 1)
+    std_degree: float        # over live segments
+
+    @property
+    def skew(self) -> float:
+        """max/avg degree — the load-imbalance the tight grid exploits."""
+        return self.max_degree / max(self.avg_degree, 1e-9)
+
+
+def segment_stats(idx: np.ndarray, num_segments: int) -> SegmentStats:
+    idx = np.asarray(idx)
+    m = int(idx.size)
+    if m == 0:
+        return SegmentStats(0, num_segments, 0, 0, 0.0, 0.0)
+    deg = np.bincount(idx, minlength=num_segments)
+    live = deg[deg > 0]
+    return SegmentStats(
+        num_rows=m,
+        num_segments=num_segments,
+        live_segments=int(live.size),
+        max_degree=int(deg.max()),
+        avg_degree=float(m / max(live.size, 1)),
+        std_degree=float(live.std()) if live.size else 0.0,
+    )
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class SegmentPlan:
+    """Precomputed schedule for one (sorted idx, num_segments) instance.
+
+    Leaves: ``chunk_first`` / ``chunk_count`` (int32, shape (out_blocks,)).
+    Aux (static): sizes, the tight ``max_chunks``, the selected ``config``,
+    and :class:`SegmentStats`.
+    """
+    chunk_first: jax.Array
+    chunk_count: jax.Array
+    num_rows: int
+    num_segments: int
+    max_chunks: int          # tight: max(chunk_count), >= 1
+    config: KernelConfig
+    stats: SegmentStats
+
+    # -- pytree protocol ----------------------------------------------------
+    def tree_flatten(self):
+        children = (self.chunk_first, self.chunk_count)
+        aux = (self.num_rows, self.num_segments, self.max_chunks,
+               self.config, self.stats)
+        return children, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        chunk_first, chunk_count = children
+        num_rows, num_segments, max_chunks, config, stats = aux
+        return cls(chunk_first, chunk_count, num_rows, num_segments,
+                   max_chunks, config, stats)
+
+    # -- introspection ------------------------------------------------------
+    @property
+    def worst_case_chunks(self) -> int:
+        """The chunk-grid bound the plan-less kernel must assume."""
+        return _round_up(max(self.num_rows, 1), self.config.m_b) // self.config.m_b
+
+    @property
+    def grid_savings(self) -> float:
+        """worst-case / tight chunk-dim ratio (>= 1; higher = more skew won)."""
+        return self.worst_case_chunks / max(self.max_chunks, 1)
+
+    def validate(self, num_rows: int, num_segments: int) -> None:
+        """Trace-time consistency check against the arrays of an op call."""
+        if num_rows != self.num_rows or num_segments != self.num_segments:
+            raise ValueError(
+                f"SegmentPlan built for (M={self.num_rows}, "
+                f"S={self.num_segments}) used with (M={num_rows}, "
+                f"S={num_segments}); rebuild the plan for this graph.")
+
+
+def make_plan(idx, num_segments: int, feat: int = 128,
+              config: Optional[KernelConfig] = None) -> SegmentPlan:
+    """Build a :class:`SegmentPlan` from a *concrete* sorted segment index.
+
+    ``idx`` must be host-available (numpy or committed jax array) — plans are
+    built once per graph outside jit, then reused inside it. ``feat`` is the
+    representative feature width fed to the config heuristic (use the widest
+    layer width; only the selected config depends on it, not correctness).
+    """
+    idx_np = np.asarray(idx).astype(np.int32)
+    if idx_np.ndim != 1:
+        raise ValueError(f"idx must be 1-D, got shape {idx_np.shape}")
+    if idx_np.size and np.any(idx_np[1:] < idx_np[:-1]):
+        raise ValueError("idx must be sorted non-decreasing")
+    stats = segment_stats(idx_np, num_segments)
+
+    if config is None:
+        from repro.core.heuristics import select_config
+        # data-aware selection: the *live* segment count drives avg degree,
+        # so gapped ids (batched / masked graphs) do not dilute the feature
+        config = select_config(max(int(idx_np.size), 1),
+                               max(stats.live_segments, 1), feat)
+
+    m = int(idx_np.size)
+    s_b, m_b = config.s_b, config.m_b
+    m_pad = _round_up(max(m, 1), m_b)
+    idxp = np.full((m_pad,), num_segments, np.int32)
+    idxp[:m] = idx_np
+
+    # the kernel's own metadata helper, evaluated concretely on the host —
+    # one formula, so plans can never drift from the per-call path
+    from repro.kernels.segment_reduce import chunk_metadata
+    chunk_first, chunk_count = chunk_metadata(idxp, num_segments, s_b, m_b,
+                                              m_pad)
+    chunk_count_np = np.asarray(chunk_count)
+    max_chunks = max(1, int(chunk_count_np.max())) if chunk_count_np.size else 1
+    return SegmentPlan(
+        chunk_first=jnp.asarray(chunk_first),
+        chunk_count=jnp.asarray(chunk_count),
+        num_rows=m,
+        num_segments=int(num_segments),
+        max_chunks=max_chunks,
+        config=config,
+        stats=stats,
+    )
+
+
+def make_graph_plan(edge_index, num_nodes: int, feat: int = 128,
+                    config: Optional[KernelConfig] = None) -> SegmentPlan:
+    """Plan for GNN aggregation over ``edge_index`` (2, E) with
+    ``edge_index[1]`` (destinations) sorted non-decreasing — the convention
+    of :mod:`repro.models.gnn`. One plan serves every layer of a model and
+    every training step on the same graph."""
+    edge_index = np.asarray(edge_index)
+    if edge_index.ndim != 2 or edge_index.shape[0] != 2:
+        raise ValueError(f"edge_index must be (2, E), got {edge_index.shape}")
+    return make_plan(edge_index[1], num_nodes, feat=feat, config=config)

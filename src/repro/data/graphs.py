@@ -9,7 +9,7 @@ relies on (paper §IV).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
+from typing import Optional, Sequence
 
 import numpy as np
 
@@ -24,10 +24,25 @@ class Graph:
     x: np.ndarray                 # (V, F) float32
     labels: np.ndarray            # (V,) int32
     deg_inv_sqrt: np.ndarray      # (V,) float32
+    # block-diagonal batch bookkeeping (batch_graphs); None for single graphs
+    node_ptr: Optional[np.ndarray] = None    # (G+1,) node offsets per graph
+    edge_ptr: Optional[np.ndarray] = None    # (G+1,) edge offsets per graph
 
     @property
     def num_edges(self) -> int:
         return self.edge_index.shape[1]
+
+    @property
+    def num_graphs(self) -> int:
+        return 1 if self.node_ptr is None else len(self.node_ptr) - 1
+
+    def make_plan(self, feat: Optional[int] = None, config=None):
+        """Precompute the reduction schedule for this graph (built once,
+        reused across layers / steps — see :mod:`repro.core.plan`)."""
+        from repro.core.plan import make_graph_plan
+        feat = self.x.shape[1] if feat is None else feat
+        return make_graph_plan(self.edge_index, self.num_nodes, feat=feat,
+                               config=config)
 
 
 def synth_graph(name: str, num_nodes: int, num_edges: int, feat: int = 32,
@@ -50,6 +65,45 @@ def synth_graph(name: str, num_nodes: int, num_edges: int, feat: int = 32,
         labels=rng.integers(0, num_classes, num_nodes, dtype=np.int32),
         deg_inv_sqrt=(1.0 / np.sqrt(np.maximum(deg, 1.0))).astype(np.float32),
     )
+
+
+def batch_graphs(graphs: Sequence[Graph], name: Optional[str] = None) -> Graph:
+    """Block-diagonal multi-graph batching (PyG ``Batch`` convention).
+
+    Node ids of graph g are offset by ``sum(|V_0..g-1|)``; edges are
+    concatenated in graph order. Because every member's ``edge_index[1]`` is
+    sorted and the offsets are increasing, the batched destinations remain
+    sorted — so one :class:`~repro.core.plan.SegmentPlan` built on the batch
+    covers all member graphs at once, and a single fused segment-reduce call
+    aggregates the whole batch (no per-graph loop, no padding)."""
+    if not graphs:
+        raise ValueError("batch_graphs needs at least one graph")
+    node_ptr = np.zeros(len(graphs) + 1, np.int64)
+    edge_ptr = np.zeros(len(graphs) + 1, np.int64)
+    for i, g in enumerate(graphs):
+        node_ptr[i + 1] = node_ptr[i] + g.num_nodes
+        edge_ptr[i + 1] = edge_ptr[i] + g.num_edges
+    edge_index = np.concatenate(
+        [g.edge_index.astype(np.int64) + node_ptr[i]
+         for i, g in enumerate(graphs)], axis=1).astype(np.int32)
+    return Graph(
+        name=name or "batch(" + "+".join(g.name for g in graphs) + ")",
+        edge_index=edge_index,
+        num_nodes=int(node_ptr[-1]),
+        x=np.concatenate([g.x for g in graphs], axis=0),
+        labels=np.concatenate([g.labels for g in graphs], axis=0),
+        deg_inv_sqrt=np.concatenate([g.deg_inv_sqrt for g in graphs], axis=0),
+        node_ptr=node_ptr,
+        edge_ptr=edge_ptr,
+    )
+
+
+def unbatch_nodes(batched: Graph, values):
+    """Split a (V_total, ...) per-node array back into per-graph arrays."""
+    if batched.node_ptr is None:
+        return [values]
+    return [values[batched.node_ptr[i]:batched.node_ptr[i + 1]]
+            for i in range(batched.num_graphs)]
 
 
 _TABLE = {name: (v, e) for name, v, e in TABLE_II}

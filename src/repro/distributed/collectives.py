@@ -29,8 +29,15 @@ from jax.experimental.shard_map import shard_map
 from repro.optim import compression
 
 
+def _axis_size(axis_name: str) -> int:
+    """Static size of a named axis. ``jax.lax.axis_size`` does not exist in
+    the pinned JAX; ``psum`` of a literal 1 is evaluated at trace time from
+    the axis env, yielding a concrete int usable in Python control flow."""
+    return int(jax.lax.psum(1, axis_name))
+
+
 def _shift_up(x, axis_name: str):
-    n = jax.lax.axis_size(axis_name)
+    n = _axis_size(axis_name)
     return jax.lax.ppermute(x, axis_name,
                             perm=[(j, (j + 1) % n) for j in range(n)])
 
@@ -39,7 +46,7 @@ def ring_allreduce(y, axis_name: str):
     """Chunked ring all-reduce of `y` (equivalent to psum(y, axis_name)).
 
     Falls back to psum when the leading dim doesn't split evenly."""
-    n = jax.lax.axis_size(axis_name)
+    n = _axis_size(axis_name)
     if n == 1:
         return y
     m = y.shape[0]
@@ -82,7 +89,7 @@ def hierarchical_psum(x, pod_axis: str, data_axis: str):
 
     Equivalent to psum over (pod, data) but the cross-pod (DCI) hop moves
     1/|data| of the bytes."""
-    n = jax.lax.axis_size(data_axis)
+    n = _axis_size(data_axis)
     if x.shape[0] % n == 0:
         scat = jax.lax.psum_scatter(x, data_axis, scatter_dimension=0,
                                     tiled=True)
@@ -94,7 +101,7 @@ def hierarchical_psum(x, pod_axis: str, data_axis: str):
 def compressed_psum(x, ef, pod_axis: str, data_axis: str):
     """hierarchical_psum with int8 EF-compression on the cross-pod hop.
     Returns (reduced, new_error_feedback)."""
-    n = jax.lax.axis_size(data_axis)
+    n = _axis_size(data_axis)
     if x.shape[0] % n != 0:
         return jax.lax.psum(jax.lax.psum(x, data_axis), pod_axis), ef
     scat = jax.lax.psum_scatter(x, data_axis, scatter_dimension=0, tiled=True)

@@ -24,7 +24,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.config_space import KernelConfig
-from repro.kernels.segment_reduce import _round_up, chunk_metadata
+from repro.kernels.segment_reduce import _resolve_plan, _round_up, chunk_metadata
 
 
 def _gather_chunk(gidx_ref, h_ref, xbuf_ref, sem, j: jax.Array, n_b: int):
@@ -150,7 +150,7 @@ def _sr_body(cf_ref, cc_ref, gidx_ref, idx_ref, w_ref, h_ref, o_ref,
 def _gather_segment_reduce_impl(h, gather_idx, seg_idx, weight,
                                 num_segments: int, config: KernelConfig,
                                 max_chunks: Optional[int], interpret: bool,
-                                has_weight: bool):
+                                has_weight: bool, plan=None):
     m = gather_idx.shape[0]
     v, n = h.shape
     s_b, n_b, m_b = config.s_b, config.n_b, config.m_b
@@ -169,8 +169,11 @@ def _gather_segment_reduce_impl(h, gather_idx, seg_idx, weight,
     idx2d = idxp.reshape(m_pad // m_b, m_b)
     w2d = wp.reshape(m_pad // m_b, m_b)
 
-    chunk_first, chunk_count = chunk_metadata(idxp, num_segments, s_b, m_b,
-                                              m_pad)
+    if plan is not None:
+        chunk_first, chunk_count = plan.chunk_first, plan.chunk_count
+    else:
+        chunk_first, chunk_count = chunk_metadata(idxp, num_segments, s_b,
+                                                  m_b, m_pad)
     out_blocks = s_pad // s_b
     n_tiles = n_pad // n_b
     if max_chunks is None:
@@ -221,9 +224,13 @@ def gather_segment_reduce_pallas(h, gather_idx, seg_idx, num_segments: int,
                                  weight=None,
                                  config: Optional[KernelConfig] = None,
                                  max_chunks: Optional[int] = None,
-                                 interpret: bool = False):
+                                 interpret: bool = False, plan=None):
     """Fused Y[s] = Σ_{seg[i]==s} (w[i]·) H[gather_idx[i]]  — format-agnostic
-    SpMM.  seg_idx must be sorted non-decreasing."""
+    SpMM.  seg_idx must be sorted non-decreasing. ``plan``: precomputed
+    :class:`repro.core.plan.SegmentPlan` over ``seg_idx`` (shared with the
+    unfused kernel — both consume the same chunk metadata)."""
+    config, max_chunks = _resolve_plan(plan, int(gather_idx.shape[0]),
+                                       num_segments, config, max_chunks)
     if config is None:
         from repro.core.heuristics import select_config
         config = select_config(int(gather_idx.shape[0]), num_segments,
@@ -233,4 +240,4 @@ def gather_segment_reduce_pallas(h, gather_idx, seg_idx, num_segments: int,
         weight = jnp.ones((gather_idx.shape[0],), jnp.float32)
     return _gather_segment_reduce_impl(h, gather_idx, seg_idx, weight,
                                        num_segments, config, max_chunks,
-                                       interpret, has_weight)
+                                       interpret, has_weight, plan)

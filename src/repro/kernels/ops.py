@@ -28,25 +28,25 @@ def _default_interpret() -> bool:
 def segment_reduce(x, idx, num_segments: int, reduce: str = "sum",
                    config: Optional[KernelConfig] = None,
                    max_chunks: Optional[int] = None,
-                   interpret: Optional[bool] = None):
+                   interpret: Optional[bool] = None, plan=None):
     interpret = _default_interpret() if interpret is None else interpret
     return segment_reduce_pallas(x, idx, num_segments, reduce=reduce,
                                  config=config, max_chunks=max_chunks,
-                                 interpret=interpret)
+                                 interpret=interpret, plan=plan)
 
 
 def gather_segment_reduce(h, gather_idx, seg_idx, num_segments: int,
                           weight=None, reduce: str = "sum",
                           config: Optional[KernelConfig] = None,
                           max_chunks: Optional[int] = None,
-                          interpret: Optional[bool] = None):
+                          interpret: Optional[bool] = None, plan=None):
     if reduce != "sum":
         raise NotImplementedError("fused gather supports sum (paper §IV)")
     interpret = _default_interpret() if interpret is None else interpret
     return gather_segment_reduce_pallas(h, gather_idx, seg_idx, num_segments,
                                         weight=weight, config=config,
                                         max_chunks=max_chunks,
-                                        interpret=interpret)
+                                        interpret=interpret, plan=plan)
 
 
 def segment_matmul(x, group_sizes, w, config: Optional[KernelConfig] = None,

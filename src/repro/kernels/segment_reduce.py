@@ -155,6 +155,27 @@ def _round_up(x: int, m: int) -> int:
     return (x + m - 1) // m * m
 
 
+def _resolve_plan(plan, num_rows: int, num_segments: int,
+                  config: Optional[KernelConfig],
+                  max_chunks: Optional[int]):
+    """Merge an optional SegmentPlan into (config, max_chunks).
+
+    The plan's config wins when none is given explicitly; an explicit config
+    must agree on the tiling the metadata was built for (s_b, m_b)."""
+    if plan is None:
+        return config, max_chunks
+    plan.validate(num_rows, num_segments)
+    if config is None:
+        config = plan.config
+    elif (config.s_b, config.m_b) != (plan.config.s_b, plan.config.m_b):
+        raise ValueError(
+            f"explicit config (s_b={config.s_b}, m_b={config.m_b}) conflicts "
+            f"with plan tiling (s_b={plan.config.s_b}, m_b={plan.config.m_b})")
+    if max_chunks is None:
+        max_chunks = plan.max_chunks
+    return config, max_chunks
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("num_segments", "reduce", "config", "max_chunks",
@@ -163,13 +184,18 @@ def _round_up(x: int, m: int) -> int:
 def segment_reduce_pallas(x, idx, num_segments: int, reduce: str = "sum",
                           config: Optional[KernelConfig] = None,
                           max_chunks: Optional[int] = None,
-                          interpret: bool = False):
+                          interpret: bool = False, plan=None):
     """Blocked segment reduction via pl.pallas_call.
 
     x: (M, N); idx: (M,) sorted int32; returns (num_segments, N) in x.dtype.
     ``max_chunks``: static bound on chunks per output block (worst case:
     all rows in one block). Tighten it for skewed inputs when known.
+    ``plan``: a precomputed :class:`repro.core.plan.SegmentPlan` — supplies
+    config, a tight ``max_chunks``, and the chunk metadata, skipping their
+    per-call recomputation.
     """
+    config, max_chunks = _resolve_plan(plan, int(x.shape[0]), num_segments,
+                                       config, max_chunks)
     if config is None:
         from repro.core.heuristics import select_config
         config = select_config(int(x.shape[0]), num_segments, int(x.shape[1]))
@@ -177,7 +203,7 @@ def segment_reduce_pallas(x, idx, num_segments: int, reduce: str = "sum",
         config = KernelConfig("SR", config.s_b, config.n_b, config.m_b, 1)
     if reduce == "mean":
         s = segment_reduce_pallas(x, idx, num_segments, "sum", config,
-                                  max_chunks, interpret)
+                                  max_chunks, interpret, plan)
         cnt = jax.ops.segment_sum(jnp.ones((x.shape[0],), jnp.float32), idx,
                                   num_segments, indices_are_sorted=True)
         return (s.astype(jnp.float32)
@@ -196,8 +222,11 @@ def segment_reduce_pallas(x, idx, num_segments: int, reduce: str = "sum",
                    constant_values=num_segments)
     idx2d = idxp.reshape(m_pad // m_b, m_b)
 
-    chunk_first, chunk_count = chunk_metadata(idxp, num_segments, s_b, m_b,
-                                              m_pad)
+    if plan is not None:
+        chunk_first, chunk_count = plan.chunk_first, plan.chunk_count
+    else:
+        chunk_first, chunk_count = chunk_metadata(idxp, num_segments, s_b,
+                                                  m_b, m_pad)
     out_blocks = s_pad // s_b
     n_tiles = n_pad // n_b
     if max_chunks is None:

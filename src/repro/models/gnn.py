@@ -27,14 +27,14 @@ def gcn_layer_init(key, d_in: int, d_out: int, dtype=jnp.float32):
 
 
 def gcn_layer(prm, x, edge_index, deg_inv_sqrt, num_nodes: int,
-              impl: str = "ref"):
+              impl: str = "ref", plan=None):
     """GCN: Y = D^{-1/2} A D^{-1/2} X W — SpMM with weights = normalized
     coefficients, i.e. index_weight_segment_reduce (paper §IV / Fig. 10)."""
     src, dst = edge_index[0], edge_index[1]
     h = x @ prm["w"].value
     w = deg_inv_sqrt[src] * deg_inv_sqrt[dst]
     out = geot.index_weight_segment_reduce(h, src, w, dst, num_nodes,
-                                           impl=impl)
+                                           impl=impl, plan=plan)
     return out + prm["b"].value
 
 
@@ -49,10 +49,12 @@ def gin_layer_init(key, d_in: int, d_out: int, dtype=jnp.float32):
     }
 
 
-def gin_layer(prm, x, edge_index, num_nodes: int, impl: str = "ref"):
+def gin_layer(prm, x, edge_index, num_nodes: int, impl: str = "ref",
+              plan=None):
     """GIN: h' = MLP((1+ε)·h + Σ_neighbors h) — unweighted fused aggregate."""
     src, dst = edge_index[0], edge_index[1]
-    agg = geot.index_segment_reduce(x, src, dst, num_nodes, impl=impl)
+    agg = geot.index_segment_reduce(x, src, dst, num_nodes, impl=impl,
+                                    plan=plan)
     h = (1.0 + prm["eps"].value) * x + agg
     h = jax.nn.relu(h @ prm["mlp1"].value + prm["b1"].value)
     return h @ prm["mlp2"].value + prm["b2"].value
@@ -65,11 +67,12 @@ def sage_layer_init(key, d_in: int, d_out: int, dtype=jnp.float32):
             "b": zeros_init((d_out,), ("mlp",), dtype)}
 
 
-def sage_layer(prm, x, edge_index, num_nodes: int, impl: str = "ref"):
+def sage_layer(prm, x, edge_index, num_nodes: int, impl: str = "ref",
+               plan=None):
     """GraphSAGE (mean aggregator)."""
     src, dst = edge_index[0], edge_index[1]
     agg = geot.index_segment_reduce(x, src, dst, num_nodes, reduce="mean",
-                                    impl=impl)
+                                    impl=impl, plan=plan)
     return (x @ prm["w_self"].value + agg @ prm["w_neigh"].value
             + prm["b"].value)
 
@@ -81,7 +84,8 @@ def gat_layer_init(key, d_in: int, d_out: int, dtype=jnp.float32):
             "a_dst": dense_init(k3, d_out, 1, ("mlp", None), dtype)}
 
 
-def gat_layer(prm, x, edge_index, num_nodes: int, impl: str = "ref"):
+def gat_layer(prm, x, edge_index, num_nodes: int, impl: str = "ref",
+              plan=None):
     """Single-head GAT: attention coefficients via segment_softmax over the
     sorted destination segments."""
     src, dst = edge_index[0], edge_index[1]
@@ -89,7 +93,7 @@ def gat_layer(prm, x, edge_index, num_nodes: int, impl: str = "ref"):
     alpha = (h @ prm["a_src"].value)[src, 0] + (h @ prm["a_dst"].value)[dst, 0]
     alpha = geot.segment_softmax(jax.nn.leaky_relu(alpha, 0.2), dst, num_nodes)
     return geot.index_weight_segment_reduce(h, src, alpha, dst, num_nodes,
-                                            impl=impl)
+                                            impl=impl, plan=plan)
 
 
 # ---------------------------------------------------------------------------
@@ -112,23 +116,28 @@ def init(key, model: str, d_in: int, hidden: int, num_classes: int,
 
 
 def forward(params, model: str, x, edge_index, num_nodes: int,
-            deg_inv_sqrt: Optional[jax.Array] = None, impl: str = "ref"):
+            deg_inv_sqrt: Optional[jax.Array] = None, impl: str = "ref",
+            plan=None):
+    """``plan``: one :class:`~repro.core.plan.SegmentPlan` built on this
+    graph's destinations — reused by every layer (and, via the custom VJPs,
+    by the backward pass)."""
     _, layer_fn = _LAYER[model]
     h = x
     for i, prm in enumerate(params):
         if model == "gcn":
-            h = layer_fn(prm, h, edge_index, deg_inv_sqrt, num_nodes, impl)
+            h = layer_fn(prm, h, edge_index, deg_inv_sqrt, num_nodes, impl,
+                         plan)
         else:
-            h = layer_fn(prm, h, edge_index, num_nodes, impl)
+            h = layer_fn(prm, h, edge_index, num_nodes, impl, plan)
         if i < len(params) - 1:
             h = jax.nn.relu(h)
     return h
 
 
 def loss_fn(params, model: str, x, edge_index, labels, num_nodes: int,
-            deg_inv_sqrt=None, impl: str = "ref"):
+            deg_inv_sqrt=None, impl: str = "ref", plan=None):
     logits = forward(params, model, x, edge_index, num_nodes,
-                     deg_inv_sqrt, impl)
+                     deg_inv_sqrt, impl, plan)
     logz = jax.nn.logsumexp(logits, axis=-1)
     gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
     return jnp.mean(logz - gold)

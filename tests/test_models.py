@@ -160,8 +160,15 @@ def test_gnn_training_decreases_loss():
     labels = jnp.asarray((np.asarray(x[:, 0]) > 0).astype(np.int32))
     params = gnn.init(KEY, "gcn", 8, 16, 2)
     l0 = float(gnn.loss_fn(params, "gcn", x, ei, labels, v, dis))
-    for _ in range(150):
+
+    @jax.jit
+    def step(params):
         g = jax.grad(gnn.loss_fn)(params, "gcn", x, ei, labels, v, dis)
-        params = jax.tree_util.tree_map(lambda p, gg: p - 0.2 * gg, params, g)
+        return jax.tree_util.tree_map(lambda p, gg: p - 0.5 * gg, params, g)
+
+    for _ in range(300):
+        params = step(params)
     l1 = float(gnn.loss_fn(params, "gcn", x, ei, labels, v, dis))
+    # deterministic on CPU (fixed seeds); 300 steps of lr=0.5 drop the loss
+    # 0.694 -> ~0.506, leaving >2x margin over the threshold
     assert l1 < l0 - 0.08, (l0, l1)

@@ -1,0 +1,307 @@
+"""SegmentPlan (precomputed reduction schedules): plan-vs-planless
+equivalence across impls, tight grid bounds on skewed/gapped inputs,
+block-diagonal multi-graph batching, and grads through plan-carrying ops."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ops
+from repro.core.config_space import KernelConfig
+from repro.core.plan import make_graph_plan, make_plan
+from repro.data.graphs import batch_graphs, synth_graph, unbatch_nodes
+from repro.kernels import ops as kops, ref
+from repro.models import gnn
+
+RNG = np.random.default_rng(11)
+CFG = KernelConfig("SR", 32, 128, 64, 1)
+CFG_PR = KernelConfig("PR", 32, 128, 64, 8)
+
+
+def _skewed_idx(m=600, s=50, heavy=400):
+    """One segment owns `heavy` of the m rows — power-law-style imbalance."""
+    idx = np.concatenate([np.zeros(heavy, np.int32),
+                          RNG.integers(1, s, m - heavy).astype(np.int32)])
+    return np.sort(idx), s
+
+
+def _gapped_idx(m=300, s=500):
+    """Occupied ids far apart: most segments empty."""
+    return np.sort(RNG.choice(np.arange(0, s, 7), m)).astype(np.int32), s
+
+
+# ---------------------------------------------------------------------------
+# plan construction
+# ---------------------------------------------------------------------------
+
+def test_plan_tight_max_chunks_on_skew():
+    idx, s = _skewed_idx()
+    plan = make_plan(idx, s, feat=16, config=CFG)
+    m_pad = (len(idx) + CFG.m_b - 1) // CFG.m_b * CFG.m_b
+    assert plan.worst_case_chunks == m_pad // CFG.m_b
+    # the acceptance bound: the planned grid is strictly tighter than the
+    # plan-less worst case on a skewed graph
+    assert plan.max_chunks < m_pad // CFG.m_b
+    assert plan.grid_savings > 1.0
+    assert plan.stats.max_degree == 400
+
+
+def test_plan_metadata_matches_kernel_metadata():
+    from repro.kernels.segment_reduce import chunk_metadata
+    for make in (_skewed_idx, _gapped_idx):
+        idx, s = make()
+        plan = make_plan(idx, s, feat=16, config=CFG)
+        m_pad = (len(idx) + CFG.m_b - 1) // CFG.m_b * CFG.m_b
+        idxp = jnp.pad(jnp.asarray(idx), (0, m_pad - len(idx)),
+                       constant_values=s)
+        cf, cc = chunk_metadata(idxp, s, CFG.s_b, CFG.m_b, m_pad)
+        np.testing.assert_array_equal(np.asarray(plan.chunk_first),
+                                      np.asarray(cf))
+        np.testing.assert_array_equal(np.asarray(plan.chunk_count),
+                                      np.asarray(cc))
+        assert plan.max_chunks == max(1, int(np.asarray(cc).max()))
+
+
+def test_plan_rejects_unsorted_and_mismatched():
+    with pytest.raises(ValueError):
+        make_plan(np.array([3, 1, 2], np.int32), 5)
+    idx, s = _skewed_idx()
+    plan = make_plan(idx, s, feat=16, config=CFG)
+    with pytest.raises(ValueError):
+        kops.segment_reduce(jnp.zeros((7, 8)), jnp.zeros(7, jnp.int32), s,
+                            plan=plan, interpret=True)
+    with pytest.raises(ValueError):   # conflicting explicit tiling
+        kops.segment_reduce(jnp.zeros((len(idx), 8)), jnp.asarray(idx), s,
+                            config=KernelConfig("SR", 64, 128, 128, 1),
+                            plan=plan, interpret=True)
+
+
+def test_plan_is_a_pytree():
+    idx, s = _skewed_idx()
+    plan = make_plan(idx, s, feat=16, config=CFG)
+    leaves, treedef = jax.tree_util.tree_flatten(plan)
+    assert len(leaves) == 2
+    plan2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert plan2.max_chunks == plan.max_chunks
+    assert plan2.config == plan.config
+
+
+# ---------------------------------------------------------------------------
+# plan-vs-planless equivalence: all three reduces × ref/blocked/pallas
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("impl", ["ref", "blocked", "pallas"])
+@pytest.mark.parametrize("reduce", ["sum", "mean", "max"])
+def test_segment_reduce_plan_equivalence(impl, reduce):
+    for make in (_skewed_idx, _gapped_idx):
+        idx, s = make()
+        x = jnp.asarray(RNG.standard_normal((len(idx), 24)), jnp.float32)
+        plan = make_plan(idx, s, feat=24, config=CFG)
+        planless = ops.segment_reduce(x, jnp.asarray(idx), s, reduce, impl,
+                                      CFG)
+        planned = ops.segment_reduce(x, jnp.asarray(idx), s, reduce, impl,
+                                     None, plan)
+        pa, pb = np.asarray(planless), np.asarray(planned)
+        mask = np.isfinite(pa)
+        assert np.array_equal(np.isfinite(pb), mask)
+        np.testing.assert_allclose(pb[mask], pa[mask], rtol=3e-4, atol=3e-4)
+
+
+@pytest.mark.parametrize("impl", ["ref", "blocked", "pallas"])
+def test_index_segment_reduce_plan_equivalence(impl):
+    idx, s = _skewed_idx()
+    m, v, n = len(idx), 80, 24
+    gidx = jnp.asarray(RNG.integers(0, v, m).astype(np.int32))
+    h = jnp.asarray(RNG.standard_normal((v, n)), jnp.float32)
+    plan = make_plan(idx, s, feat=n, config=CFG)
+    for reduce in ("sum", "mean"):
+        planless = ops.index_segment_reduce(h, gidx, jnp.asarray(idx), s,
+                                            reduce, impl, CFG)
+        planned = ops.index_segment_reduce(h, gidx, jnp.asarray(idx), s,
+                                           reduce, impl, None, plan)
+        np.testing.assert_allclose(np.asarray(planned), np.asarray(planless),
+                                   rtol=3e-4, atol=3e-4)
+
+
+@pytest.mark.parametrize("impl", ["ref", "blocked", "pallas"])
+def test_index_weight_segment_reduce_plan_equivalence(impl):
+    idx, s = _skewed_idx()
+    m, v, n = len(idx), 80, 24
+    gidx = jnp.asarray(RNG.integers(0, v, m).astype(np.int32))
+    w = jnp.asarray(RNG.standard_normal(m), jnp.float32)
+    h = jnp.asarray(RNG.standard_normal((v, n)), jnp.float32)
+    plan = make_plan(idx, s, feat=n, config=CFG)
+    planless = ops.index_weight_segment_reduce(h, gidx, w, jnp.asarray(idx),
+                                               s, impl, CFG)
+    planned = ops.index_weight_segment_reduce(h, gidx, w, jnp.asarray(idx),
+                                              s, impl, None, plan)
+    np.testing.assert_allclose(np.asarray(planned), np.asarray(planless),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_pallas_pr_schedule_with_plan():
+    idx, s = _skewed_idx()
+    x = jnp.asarray(RNG.standard_normal((len(idx), 24)), jnp.float32)
+    plan = make_plan(idx, s, feat=24, config=CFG_PR)
+    got = kops.segment_reduce(x, jnp.asarray(idx), s, "sum", plan=plan,
+                              interpret=True)
+    want = ref.segment_reduce(x, jnp.asarray(idx), s)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-4, atol=3e-4)
+
+
+# ---------------------------------------------------------------------------
+# grads through plan-carrying ops
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("impl", ["ref", "blocked", "pallas"])
+def test_grad_through_plan(impl):
+    idx, s = _skewed_idx(m=300, s=30, heavy=200)
+    m, v, n = len(idx), 40, 16
+    gidx = jnp.asarray(RNG.integers(0, v, m).astype(np.int32))
+    w = jnp.asarray(RNG.standard_normal(m), jnp.float32)
+    h = jnp.asarray(RNG.standard_normal((v, n)), jnp.float32)
+    plan = make_plan(idx, s, feat=n, config=CFG)
+
+    def f(h, w, plan_, impl_):
+        y = ops.index_weight_segment_reduce(h, gidx, w, jnp.asarray(idx), s,
+                                            impl_, None, plan_)
+        return jnp.sum(y ** 2)
+
+    dh, dw = jax.grad(f, argnums=(0, 1))(h, w, plan, impl)
+    dh_ref, dw_ref = jax.grad(f, argnums=(0, 1))(h, w, None, "ref")
+    np.testing.assert_allclose(np.asarray(dh), np.asarray(dh_ref),
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(dw), np.asarray(dw_ref),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_segment_reduce_grad_with_plan_inside_jit():
+    idx, s = _skewed_idx(m=300, s=30, heavy=200)
+    x = jnp.asarray(RNG.standard_normal((len(idx), 16)), jnp.float32)
+    plan = make_plan(idx, s, feat=16, config=CFG)
+
+    @jax.jit
+    def g(x, plan):
+        return jax.grad(lambda x: ops.segment_reduce(
+            x, jnp.asarray(idx), s, "sum", "pallas", None, plan).sum())(x)
+
+    np.testing.assert_allclose(np.asarray(g(x, plan)),
+                               np.ones_like(np.asarray(x)), rtol=1e-5,
+                               atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end GNN: pallas + plan matches ref, forward and backward
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("model", ["gcn", "gin", "sage"])
+def test_gnn_pallas_plan_matches_ref(model):
+    g = synth_graph("t", 60, 300, feat=8, seed=3)
+    plan = g.make_plan(feat=16, config=CFG)
+    assert plan.num_segments == g.num_nodes
+    params = gnn.init(jax.random.PRNGKey(0), model, 8, 16, 4)
+    x = jnp.asarray(g.x)
+    ei = jnp.asarray(g.edge_index)
+    dis = jnp.asarray(g.deg_inv_sqrt)
+    want = gnn.forward(params, model, x, ei, g.num_nodes, dis, impl="ref")
+    got = gnn.forward(params, model, x, ei, g.num_nodes, dis, impl="pallas",
+                      plan=plan)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+    labels = jnp.asarray(g.labels % 4)
+    g_ref = jax.grad(gnn.loss_fn)(params, model, x, ei, labels, g.num_nodes,
+                                  dis, "ref")
+    g_pal = jax.grad(gnn.loss_fn)(params, model, x, ei, labels, g.num_nodes,
+                                  dis, "pallas", plan)
+    for a, b in zip(jax.tree_util.tree_leaves(g_ref),
+                    jax.tree_util.tree_leaves(g_pal)):
+        np.testing.assert_allclose(np.asarray(b), np.asarray(a),
+                                   rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# block-diagonal multi-graph batching
+# ---------------------------------------------------------------------------
+
+def test_batch_graphs_structure():
+    gs = [synth_graph(f"g{i}", 20 + 10 * i, 80 + 40 * i, feat=8, seed=i)
+          for i in range(3)]
+    b = batch_graphs(gs)
+    assert b.num_graphs == 3
+    assert b.num_nodes == sum(g.num_nodes for g in gs)
+    assert b.num_edges == sum(g.num_edges for g in gs)
+    dst = b.edge_index[1]
+    assert (dst[1:] >= dst[:-1]).all(), "batched destinations must stay sorted"
+    # every edge stays within its member graph's node-id block
+    for i, g in enumerate(gs):
+        e0, e1 = b.edge_ptr[i], b.edge_ptr[i + 1]
+        blk = b.edge_index[:, e0:e1]
+        assert (blk >= b.node_ptr[i]).all() and (blk < b.node_ptr[i + 1]).all()
+
+
+@pytest.mark.parametrize("model", ["gcn", "gin", "sage"])
+def test_batched_forward_matches_per_graph(model):
+    gs = [synth_graph(f"g{i}", 25 + 5 * i, 90 + 30 * i, feat=8, seed=10 + i)
+          for i in range(3)]
+    b = batch_graphs(gs)
+    plan = b.make_plan(feat=16, config=CFG)
+    params = gnn.init(jax.random.PRNGKey(1), model, 8, 16, 4)
+
+    out_b = gnn.forward(params, model, jnp.asarray(b.x),
+                        jnp.asarray(b.edge_index), b.num_nodes,
+                        jnp.asarray(b.deg_inv_sqrt), impl="pallas", plan=plan)
+    parts = unbatch_nodes(b, np.asarray(out_b))
+    for g, part in zip(gs, parts):
+        want = gnn.forward(params, model, jnp.asarray(g.x),
+                           jnp.asarray(g.edge_index), g.num_nodes,
+                           jnp.asarray(g.deg_inv_sqrt), impl="ref")
+        np.testing.assert_allclose(part, np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_batched_backward_matches_per_graph():
+    gs = [synth_graph(f"g{i}", 25, 90, feat=8, seed=20 + i) for i in range(2)]
+    b = batch_graphs(gs)
+    plan = b.make_plan(feat=16, config=CFG)
+    params = gnn.init(jax.random.PRNGKey(2), "gcn", 8, 16, 4)
+    labels_b = jnp.asarray(b.labels % 4)
+
+    g_batched = jax.grad(gnn.loss_fn)(params, "gcn", jnp.asarray(b.x),
+                                      jnp.asarray(b.edge_index), labels_b,
+                                      b.num_nodes,
+                                      jnp.asarray(b.deg_inv_sqrt),
+                                      "pallas", plan)
+    # mean CE over the batch == weighted mean of per-graph mean CEs
+    total = sum(g.num_nodes for g in gs)
+
+    def per_graph_loss(params):
+        acc = 0.0
+        for g in gs:
+            acc = acc + (g.num_nodes / total) * gnn.loss_fn(
+                params, "gcn", jnp.asarray(g.x), jnp.asarray(g.edge_index),
+                jnp.asarray(g.labels % 4), g.num_nodes,
+                jnp.asarray(g.deg_inv_sqrt), "ref")
+        return acc
+
+    g_loop = jax.grad(per_graph_loss)(params)
+    for a, b_ in zip(jax.tree_util.tree_leaves(g_loop),
+                     jax.tree_util.tree_leaves(g_batched)):
+        np.testing.assert_allclose(np.asarray(b_), np.asarray(a),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_graph_plan_batched_has_tight_grid():
+    """The batched graph keeps per-member skew visible to the plan."""
+    gs = [synth_graph(f"g{i}", 50, 400, feat=8, seed=30 + i, alpha=1.2)
+          for i in range(4)]
+    b = batch_graphs(gs)
+    plan = make_graph_plan(b.edge_index, b.num_nodes, feat=16, config=CFG)
+    assert plan.max_chunks < plan.worst_case_chunks
+    x = jnp.asarray(RNG.standard_normal((b.num_edges, 8)), jnp.float32)
+    got = kops.segment_reduce(x, jnp.asarray(b.edge_index[1]), b.num_nodes,
+                              "sum", plan=plan, interpret=True)
+    want = ref.segment_reduce(x, jnp.asarray(b.edge_index[1]), b.num_nodes)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-4, atol=3e-4)

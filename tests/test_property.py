@@ -2,7 +2,12 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="hypothesis not installed — property tests skipped (CI installs it)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import ops
 from repro.core.config_space import KernelConfig, all_configs
