@@ -25,6 +25,10 @@ ap.add_argument("--impl", default="ref", choices=["ref", "blocked", "pallas"],
                 help="aggregation backend (pallas runs interpreted on CPU)")
 ap.add_argument("--no-plan", action="store_true",
                 help="skip the precomputed SegmentPlan (ablation)")
+ap.add_argument("--tune", action="store_true",
+                help="select the kernel config from a measured autotuner "
+                     "sweep (cached in the persistent PerfDB) instead of "
+                     "the generated decision-tree rules")
 args = ap.parse_args()
 
 g = dataset(args.dataset, feat=32)
@@ -36,7 +40,7 @@ dis = jnp.asarray(g.deg_inv_sqrt)
 plan = None
 if not args.no_plan:
     t0 = time.perf_counter()
-    plan = g.make_plan(feat=args.hidden)
+    plan = g.make_plan(feat=args.hidden, tune=args.tune or None)
     dt = time.perf_counter() - t0
     print(f"  plan: config={plan.config.astuple()}  "
           f"max_chunks={plan.max_chunks} (worst case "

@@ -1,0 +1,106 @@
+#!/usr/bin/env python
+"""CI perf-regression gate: compare a fresh BENCH_*.json against the committed baseline.
+
+The smoke benchmark rows (wall-clock µs per case) are matched by name; the gate fails when
+the **geomean** slowdown across common cases exceeds the threshold (default 1.25, i.e. >25%
+— wide enough for runner-to-runner noise, tight enough to catch a real hot-path regression).
+Rows with ``us <= 0`` are metadata (geomeans, cache counters) and are skipped.
+
+Usage:
+    python scripts/check_bench.py \
+        [--fresh BENCH_segment_reduce.json] \
+        [--baseline benchmarks/baseline/BENCH_segment_reduce.json] \
+        [--threshold 1.25]
+
+Exit status: 0 = pass, 1 = regression or unusable inputs.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import sys
+
+REFRESH_HINT = (
+    "PYTHONPATH=src python -m benchmarks.bench_segment_reduce --smoke --ablation "
+    "&& cp BENCH_segment_reduce.json benchmarks/baseline/"
+)
+
+
+def load_rows(path: str) -> dict:
+    with open(path) as f:
+        doc = json.load(f)
+    rows = doc.get("rows", [])
+    return {r["name"]: float(r["us"]) for r in rows if float(r.get("us", 0.0)) > 0.0}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--fresh",
+        default="BENCH_segment_reduce.json",
+        help="artifact from the current run",
+    )
+    ap.add_argument(
+        "--baseline",
+        default="benchmarks/baseline/BENCH_segment_reduce.json",
+        help="committed reference artifact",
+    )
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=float(os.environ.get("REPRO_BENCH_GATE_TOL", "1.25")),
+        help="max allowed geomean slowdown (fresh/baseline)",
+    )
+    args = ap.parse_args(argv)
+
+    try:
+        base = load_rows(args.baseline)
+        fresh = load_rows(args.fresh)
+    except (OSError, ValueError) as exc:
+        print(f"check_bench: cannot load artifacts: {exc}", file=sys.stderr)
+        return 1
+
+    common = sorted(set(base) & set(fresh))
+    if not common:
+        print(
+            f"check_bench: no common rows between {args.baseline} and {args.fresh}",
+            file=sys.stderr,
+        )
+        return 1
+    for name in sorted(set(base) - set(fresh)):
+        print(f"  warning: row {name!r} in baseline only (renamed case?)")
+    for name in sorted(set(fresh) - set(base)):
+        print(f"  warning: row {name!r} in fresh run only (refresh the baseline to gate it)")
+
+    width = max(len(n) for n in common)
+    print(f"{'case':<{width}}  {'baseline_us':>12}  {'fresh_us':>12}  {'ratio':>7}")
+    ratios = []
+    for name in common:
+        r = fresh[name] / base[name]
+        ratios.append(r)
+        flag = "  <-- slow" if r > args.threshold else ""
+        print(f"{name:<{width}}  {base[name]:>12.1f}  {fresh[name]:>12.1f}  {r:>6.2f}x{flag}")
+
+    geomean = math.exp(sum(math.log(r) for r in ratios) / len(ratios))
+    verdict = "PASS" if geomean <= args.threshold else "FAIL"
+    print(
+        f"\ngeomean slowdown: {geomean:.3f}x over {len(ratios)} cases "
+        f"(threshold {args.threshold:.2f}x) -> {verdict}"
+    )
+    if verdict == "FAIL":
+        pct = (args.threshold - 1) * 100
+        print(
+            f"perf gate failed: fresh run is >{pct:.0f}% slower on geomean than "
+            f"{args.baseline}. If this is an intentional trade-off, regenerate the "
+            f"baseline with:\n  {REFRESH_HINT}",
+            file=sys.stderr,
+        )
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -4,6 +4,7 @@ Public API (paper §II-B, §IV):
     segment_reduce, index_segment_reduce, index_weight_segment_reduce,
     segment_softmax, segment_matmul, sddmm, gather
 """
+from repro.core.autotune import PerfDB, TuneResult, tune
 from repro.core.config_space import KernelConfig, all_configs, default_config
 from repro.core.features import InputFeatures, extract_features
 from repro.core.heuristics import hand_crafted_config, select_config
@@ -27,6 +28,7 @@ __all__ = [
     "KernelConfig", "all_configs", "default_config",
     "InputFeatures", "extract_features",
     "select_config", "hand_crafted_config",
+    "PerfDB", "TuneResult", "tune",
     "SegmentPlan", "SegmentStats", "make_plan", "make_graph_plan",
     "segment_reduce", "index_segment_reduce", "index_weight_segment_reduce",
     "segment_softmax", "segment_matmul", "sddmm", "gather",

@@ -1,13 +1,17 @@
 """Runtime config selection (paper Fig. 5, right side).
 
 Order of precedence:
-  1. generated rules (``_generated_rules.py``, produced by
-     ``python -m repro.core.train_rules``) — the deployed path;
-  2. the hand-crafted static rule (Fig. 8's baseline) as fallback.
+  1. measured config from the wall-clock autotuner's :class:`PerfDB`
+     (opt-in: ``tune=True`` / ``REPRO_AUTOTUNE=1``) — the paper's actual
+     design point: the perf database is swept with real executions;
+  2. generated rules (``_generated_rules.py``, produced by
+     ``python -m repro.core.train_rules``) — the deployed O(ns) path;
+  3. the hand-crafted static rule (Fig. 8's baseline) as fallback.
 """
 from __future__ import annotations
 
 import math
+import warnings
 
 from repro.core.config_space import KernelConfig, default_config
 
@@ -17,8 +21,23 @@ except ImportError:  # pragma: no cover
     _generated_rules = None
 
 
-def select_config(idx_size: int, num_segments: int, feat: int) -> KernelConfig:
-    """Pick ⟨schedule, S_b, N_b, M_b, K_c⟩ from O(1) features."""
+def select_config(idx_size: int, num_segments: int, feat: int, *,
+                  op: str = "segment_reduce", tune: "bool | None" = None,
+                  db=None) -> KernelConfig:
+    """Pick ⟨schedule, S_b, N_b, M_b, K_c⟩ from O(1) features.
+
+    ``tune=None`` defers to the ``REPRO_AUTOTUNE`` env var; ``tune=True``
+    engages the measured tier explicitly (sweeping once per shape class,
+    cached in the :class:`~repro.core.autotune.PerfDB` thereafter);
+    ``tune=False`` pins the selection to the generated rules. ``db`` is an
+    optional explicit PerfDB (tests / hermetic CI)."""
+    if tune is None:
+        from repro.core.autotune import autotune_enabled
+        tune = autotune_enabled()
+    if tune:
+        cfg = _tuned_config(op, idx_size, num_segments, feat, db)
+        if cfg is not None:
+            return cfg
     if _generated_rules is None:
         return default_config(feat)
     log2_size = math.log2(max(idx_size, 1))
@@ -26,6 +45,21 @@ def select_config(idx_size: int, num_segments: int, feat: int) -> KernelConfig:
     log2_avg = math.log2(max(avg, 2 ** -4))
     log2_feat = math.log2(max(feat, 1))
     return _generated_rules.select(log2_size, log2_avg, log2_feat)
+
+
+def _tuned_config(op: str, idx_size: int, num_segments: int, feat: int,
+                  db) -> "KernelConfig | None":
+    """Measured tier: tune-or-lookup; never let a measurement failure take
+    down selection — fall through to the rule tiers instead."""
+    from repro.core import autotune
+    try:
+        return autotune.tune(op=op, idx_size=int(idx_size),
+                             num_segments=int(num_segments), feat=int(feat),
+                             db=db).config
+    except Exception as exc:  # pragma: no cover - defensive
+        warnings.warn(f"autotune failed for op={op!r} ({exc!r}); "
+                      "falling back to generated rules", RuntimeWarning)
+        return None
 
 
 def hand_crafted_config(idx_size: int, num_segments: int,

@@ -364,13 +364,16 @@ def segment_softmax(x, idx, num_segments: int):
 
 
 def segment_matmul(x, group_sizes, w, impl: str = "ref",
-                   config: Optional[KernelConfig] = None):
+                   config: Optional[KernelConfig] = None, plan=None):
     """Grouped GEMM over contiguous segments (GeoT-extension; the MoE expert
     hot path):  out[rows of segment e] = X[rows of segment e] @ W[e].
 
     x: (M, K) sorted so rows of the same group are contiguous;
-    group_sizes: (E,) int32 rows per group (sum == M); w: (E, K, N)."""
+    group_sizes: (E,) int32 rows per group (sum == M); w: (E, K, N).
+    ``plan``: accepted for API symmetry with the reduction ops — only its
+    selected config is consumed (tiling), never its chunk metadata."""
     if impl == "pallas":
         from repro.kernels import ops as kops
-        return kops.segment_matmul(x, group_sizes, w, config=config)
+        return kops.segment_matmul(x, group_sizes, w, config=config,
+                                   plan=plan)
     return jax.lax.ragged_dot(x, w, group_sizes)

@@ -128,9 +128,15 @@ def top1_training_set(records: Sequence[PerfRecord], schedule: str):
 def snap_config(schedule: str, raw: np.ndarray,
                 feat_dim: int | None = None) -> KernelConfig:
     """Snap a (possibly fractional) tree prediction onto the pruned lattice
-    of valid configs (nearest in log2 space, VMEM-feasible)."""
+    of valid configs (nearest in log2 space, VMEM-feasible).
+
+    Degenerate predictions (zeros, NaN, ±inf — e.g. a tree fitted on a
+    near-empty measured PerfDB) are clamped to 1 before the log, so the
+    result is always a valid lattice point and never NaN-poisoned."""
     cands = [c for c in all_configs(feat_dim) if c.schedule == schedule]
-    raw = np.maximum(np.asarray(raw, np.float64), 1.0)
+    raw = np.asarray(raw, np.float64)
+    raw = np.where(np.isnan(raw), 1.0, raw)     # NaN → smallest lattice point
+    raw = np.clip(raw, 1.0, 2.0 ** 30)          # zeros/negatives/±inf bounded
     target = np.log2(raw)
 
     def dist(c: KernelConfig) -> float:

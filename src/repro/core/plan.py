@@ -129,13 +129,20 @@ class SegmentPlan:
 
 
 def make_plan(idx, num_segments: int, feat: int = 128,
-              config: Optional[KernelConfig] = None) -> SegmentPlan:
+              config: Optional[KernelConfig] = None,
+              tune: Optional[bool] = None) -> SegmentPlan:
     """Build a :class:`SegmentPlan` from a *concrete* sorted segment index.
 
     ``idx`` must be host-available (numpy or committed jax array) — plans are
     built once per graph outside jit, then reused inside it. ``feat`` is the
     representative feature width fed to the config heuristic (use the widest
     layer width; only the selected config depends on it, not correctness).
+
+    ``tune=True`` engages the wall-clock autotuner as the top selection tier
+    (measured sweep, cached per shape class in the
+    :class:`~repro.core.autotune.PerfDB`); ``tune=None`` defers to the
+    ``REPRO_AUTOTUNE`` env var. Plan construction is the natural place to
+    pay the one-off tuning cost: it already runs once per graph, outside jit.
     """
     idx_np = np.asarray(idx).astype(np.int32)
     if idx_np.ndim != 1:
@@ -149,7 +156,7 @@ def make_plan(idx, num_segments: int, feat: int = 128,
         # data-aware selection: the *live* segment count drives avg degree,
         # so gapped ids (batched / masked graphs) do not dilute the feature
         config = select_config(max(int(idx_np.size), 1),
-                               max(stats.live_segments, 1), feat)
+                               max(stats.live_segments, 1), feat, tune=tune)
 
     m = int(idx_np.size)
     s_b, m_b = config.s_b, config.m_b
@@ -176,12 +183,15 @@ def make_plan(idx, num_segments: int, feat: int = 128,
 
 
 def make_graph_plan(edge_index, num_nodes: int, feat: int = 128,
-                    config: Optional[KernelConfig] = None) -> SegmentPlan:
+                    config: Optional[KernelConfig] = None,
+                    tune: Optional[bool] = None) -> SegmentPlan:
     """Plan for GNN aggregation over ``edge_index`` (2, E) with
     ``edge_index[1]`` (destinations) sorted non-decreasing — the convention
     of :mod:`repro.models.gnn`. One plan serves every layer of a model and
-    every training step on the same graph."""
+    every training step on the same graph. ``tune=True`` selects the config
+    from a measured sweep (see :func:`make_plan`)."""
     edge_index = np.asarray(edge_index)
     if edge_index.ndim != 2 or edge_index.shape[0] != 2:
         raise ValueError(f"edge_index must be (2, E), got {edge_index.shape}")
-    return make_plan(edge_index[1], num_nodes, feat=feat, config=config)
+    return make_plan(edge_index[1], num_nodes, feat=feat, config=config,
+                     tune=tune)

@@ -4,16 +4,25 @@
     → Top-1 per key → multi-output decision tree (SR + PR) → codegen
     → ``_generated_rules.py``
 
+Two sources for the database:
+  * analytical (default) — the v5e roofline cost model sweeps the pruned
+    space over the augmented Table-II datasets (runs anywhere, no timing);
+  * measured — ``--from-perfdb <path>`` reads the wall-clock sweeps that
+    :func:`repro.core.autotune.tune` persisted, i.e. the paper's actual
+    pipeline (real executions → database → tree → codegen).
+
 Run:  PYTHONPATH=src python -m repro.core.train_rules
+      PYTHONPATH=src python -m repro.core.train_rules --from-perfdb ~/.cache/repro-perfdb
 """
 from __future__ import annotations
 
+import argparse
 import pathlib
 import sys
+from typing import List, Optional, Sequence
 
-import numpy as np
-
-from repro.core import codegen, perfdb
+from repro.core import codegen, costmodel, perfdb
+from repro.core.config_space import KernelConfig
 from repro.core.decision_tree import MultiOutputDecisionTree
 from repro.core.features import InputFeatures
 
@@ -54,18 +63,56 @@ def fit_schedule_rule(records):
     return f"log2_feat >= {float(best_thr)!r}", float(best_thr)
 
 
-def train(out_path: pathlib.Path | None = None, augment_factor: int = 60,
-          max_depth: int = 5, verbose: bool = True):
-    records = perfdb.build_perfdb(augment_factor=augment_factor)
+def records_from_perfdb(path=None,
+                        op: str = "segment_reduce"
+                        ) -> List[perfdb.PerfRecord]:
+    """Convert persisted wall-clock sweeps into :class:`PerfRecord` rows.
+
+    Every measured (config, µs) pair becomes a record; GFlops is the useful
+    work of the shape class over the measured time, so "higher is better"
+    Top-1 selection works identically on measured and analytical rows."""
+    from repro.core.autotune import PerfDB
+    db = PerfDB(path)
+    records: List[perfdb.PerfRecord] = []
+    for entry in db.load().values():
+        if entry.get("op") != op:
+            continue
+        m, s, f = entry["idx_size"], entry["num_segments"], entry["feat"]
+        fv = tuple(InputFeatures(m, s, f).as_vector())
+        flops = costmodel.useful_flops(m, f)
+        for t in entry["timings"]:
+            cfg = KernelConfig(*t["config"])
+            us = max(float(t["us"]), 1e-9)
+            gflops = flops / us / 1e3            # flops / (µs·1e-6) / 1e9
+            records.append(perfdb.PerfRecord(fv, cfg.schedule,
+                                             cfg.astuple(), gflops))
+    return records
+
+
+def train(out_path: Optional[pathlib.Path] = None, augment_factor: int = 60,
+          max_depth: int = 5, verbose: bool = True,
+          records: Optional[Sequence[perfdb.PerfRecord]] = None,
+          source: str = "analytical"):
+    if records is None:
+        records = perfdb.build_perfdb(augment_factor=augment_factor)
     if verbose:
-        print(f"perfdb: {len(records)} measurements over "
+        print(f"perfdb[{source}]: {len(records)} measurements over "
               f"{len({r.features for r in records})} keys", file=sys.stderr)
 
     trees = {}
     for sched in ("SR", "PR"):
         x, y = perfdb.top1_training_set(records, sched)
+        if x.size == 0:
+            raise ValueError(
+                f"no {sched} records in the database — a measured perfdb "
+                "needs sweeps covering both schedules (tune() interleaves "
+                "them by default; raise max_configs if you capped it)")
+        # measured databases can be tiny (a handful of shape classes from
+        # CI); scale the leaf floor down so the tree still splits
+        leaf = max(1, min(8, x.shape[0] // 4))
         tree = MultiOutputDecisionTree(max_depth=max_depth,
-                                       min_samples_leaf=8).fit(x, y)
+                                       min_samples_leaf=leaf,
+                                       min_samples_split=2 * leaf).fit(x, y)
         trees[sched] = tree
         if verbose:
             print(f"{sched}: {x.shape[0]} keys, depth={tree.depth()}, "
@@ -83,5 +130,36 @@ def train(out_path: pathlib.Path | None = None, augment_factor: int = 60,
     return trees, records
 
 
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description="Distill kernel-config rules from a performance database")
+    ap.add_argument("--from-perfdb", metavar="PATH", default=None,
+                    help="retrain from the measured wall-clock PerfDB at "
+                         "PATH (dir or perfdb.json) instead of the "
+                         "analytical cost model")
+    ap.add_argument("--out", default=None,
+                    help="output module path (default: _generated_rules.py "
+                         "next to this file)")
+    ap.add_argument("--augment-factor", type=int, default=60,
+                    help="dataset augmentation factor for the analytical "
+                         "sweep (paper: ×60)")
+    ap.add_argument("--max-depth", type=int, default=5)
+    args = ap.parse_args(argv)
+
+    records = None
+    source = "analytical"
+    if args.from_perfdb is not None:
+        records = records_from_perfdb(args.from_perfdb)
+        source = f"measured:{args.from_perfdb}"
+        if not records:
+            ap.error(f"no measured segment_reduce sweeps found under "
+                     f"{args.from_perfdb} — run the autotuner first "
+                     "(e.g. make_plan(..., tune=True) or "
+                     "benchmarks.bench_segment_reduce --smoke --ablation)")
+    out = pathlib.Path(args.out) if args.out else None
+    train(out_path=out, augment_factor=args.augment_factor,
+          max_depth=args.max_depth, records=records, source=source)
+
+
 if __name__ == "__main__":
-    train()
+    main()

@@ -36,13 +36,15 @@ class Graph:
     def num_graphs(self) -> int:
         return 1 if self.node_ptr is None else len(self.node_ptr) - 1
 
-    def make_plan(self, feat: Optional[int] = None, config=None):
+    def make_plan(self, feat: Optional[int] = None, config=None,
+                  tune: Optional[bool] = None):
         """Precompute the reduction schedule for this graph (built once,
-        reused across layers / steps — see :mod:`repro.core.plan`)."""
+        reused across layers / steps — see :mod:`repro.core.plan`).
+        ``tune=True`` picks the config from a measured autotuner sweep."""
         from repro.core.plan import make_graph_plan
         feat = self.x.shape[1] if feat is None else feat
         return make_graph_plan(self.edge_index, self.num_nodes, feat=feat,
-                               config=config)
+                               config=config, tune=tune)
 
 
 def synth_graph(name: str, num_nodes: int, num_edges: int, feat: int = 32,

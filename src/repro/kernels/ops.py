@@ -2,8 +2,16 @@
 
 On this CPU-only container the kernels execute with ``interpret=True``
 (Pallas interpreter); on TPU hardware set ``REPRO_PALLAS_INTERPRET=0`` (or
-pass ``interpret=False``) to compile via Mosaic. Config selection defaults to
-the data-aware generated rules (paper §III-C).
+pass ``interpret=False``) to compile via Mosaic.
+
+Config selection follows one precedence for every op (paper §III-C +
+the measured tier of :mod:`repro.core.autotune`):
+
+    explicit ``config=``  >  ``plan.config``  >  measured PerfDB entry
+    (``REPRO_AUTOTUNE=1``)  >  generated decision-tree rules  >  hand-crafted
+
+Resolution happens *here*, outside the jitted pallas_call wrappers, so a
+wall-clock tuning sweep never runs at trace time.
 """
 from __future__ import annotations
 
@@ -25,11 +33,26 @@ def _default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def _resolve_config(config: Optional[KernelConfig], plan, idx_size: int,
+                    num_segments: int, feat: int,
+                    op: str) -> Optional[KernelConfig]:
+    """Apply the selection precedence ahead of the jit boundary.
+
+    Returns None only when a plan carries the config (the kernel merges it
+    with the plan's chunk metadata via ``_resolve_plan``)."""
+    if config is not None or plan is not None:
+        return config
+    from repro.core.heuristics import select_config
+    return select_config(int(idx_size), int(num_segments), int(feat), op=op)
+
+
 def segment_reduce(x, idx, num_segments: int, reduce: str = "sum",
                    config: Optional[KernelConfig] = None,
                    max_chunks: Optional[int] = None,
                    interpret: Optional[bool] = None, plan=None):
     interpret = _default_interpret() if interpret is None else interpret
+    config = _resolve_config(config, plan, x.shape[0], num_segments,
+                             x.shape[-1], "segment_reduce")
     return segment_reduce_pallas(x, idx, num_segments, reduce=reduce,
                                  config=config, max_chunks=max_chunks,
                                  interpret=interpret, plan=plan)
@@ -43,6 +66,8 @@ def gather_segment_reduce(h, gather_idx, seg_idx, num_segments: int,
     if reduce != "sum":
         raise NotImplementedError("fused gather supports sum (paper §IV)")
     interpret = _default_interpret() if interpret is None else interpret
+    config = _resolve_config(config, plan, gather_idx.shape[0], num_segments,
+                             h.shape[-1], "gather_segment_reduce")
     return gather_segment_reduce_pallas(h, gather_idx, seg_idx, num_segments,
                                         weight=weight, config=config,
                                         max_chunks=max_chunks,
@@ -51,19 +76,29 @@ def gather_segment_reduce(h, gather_idx, seg_idx, num_segments: int,
 
 def segment_matmul(x, group_sizes, w, config: Optional[KernelConfig] = None,
                    max_groups: Optional[int] = None,
-                   interpret: Optional[bool] = None):
+                   interpret: Optional[bool] = None, plan=None):
+    """Grouped GEMM. ``plan=`` is accepted for API symmetry with the
+    reduction ops: only its config is consumed (the chunk metadata of a
+    SegmentPlan describes a segment index, not group offsets)."""
     interpret = _default_interpret() if interpret is None else interpret
-    m_b = config.m_b if config is not None else 128
-    n_b = config.n_b if config is not None else 128
-    return segment_matmul_pallas(x, group_sizes, w, m_b=m_b, n_b=n_b,
-                                 max_groups=max_groups, interpret=interpret)
+    if config is None and plan is not None:
+        config = plan.config
+    if config is None:
+        from repro.core.heuristics import select_config
+        config = select_config(int(x.shape[0]), int(group_sizes.shape[0]),
+                               int(w.shape[-1]), op="segment_matmul")
+    return segment_matmul_pallas(x, group_sizes, w, m_b=config.m_b,
+                                 n_b=config.n_b, max_groups=max_groups,
+                                 interpret=interpret)
 
 
 def sddmm(a, b, row_idx, col_idx, config: Optional[KernelConfig] = None,
           interpret: Optional[bool] = None):
     from repro.kernels.sddmm import sddmm_pallas
     interpret = _default_interpret() if interpret is None else interpret
-    m_b = config.m_b if config is not None else 256
-    n_b = config.n_b if config is not None else 512
-    return sddmm_pallas(a, b, row_idx, col_idx, m_b=m_b, n_b=n_b,
-                        interpret=interpret)
+    if config is None:
+        from repro.core.heuristics import select_config
+        config = select_config(int(row_idx.shape[0]), int(a.shape[0]),
+                               int(a.shape[-1]), op="sddmm")
+    return sddmm_pallas(a, b, row_idx, col_idx, m_b=config.m_b,
+                        n_b=config.n_b, interpret=interpret)

@@ -17,6 +17,20 @@ from repro.core import ops as geot
 from repro.models.params import P, dense_init, zeros_init
 
 
+def make_model_plan(edge_index, num_nodes: int, feat: int,
+                    tune: Optional[bool] = None, config=None):
+    """One :class:`~repro.core.plan.SegmentPlan` for every layer (and, via
+    the custom VJPs, every backward pass) of a model on this graph.
+
+    ``feat`` should be the widest layer width. ``tune=True`` selects the
+    kernel config from a measured autotuner sweep instead of the generated
+    rules — the one-off sweep cost is paid here, once per graph, and cached
+    in the persistent PerfDB per (device, shape class)."""
+    from repro.core.plan import make_graph_plan
+    return make_graph_plan(edge_index, num_nodes, feat=feat, config=config,
+                           tune=tune)
+
+
 # ---------------------------------------------------------------------------
 # layers (paper Listing 2 style)
 # ---------------------------------------------------------------------------
