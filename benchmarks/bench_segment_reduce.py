@@ -113,7 +113,9 @@ def run_smoke():
 
     Exercises the real kernel path — tight grid from the plan — at sizes
     where the interpreter stays in seconds, and records the plan's grid
-    tightening so the CI artifact tracks it over time."""
+    tightening so the CI artifact tracks it over time. Also times the
+    fused-mean/max/softmax gather kernels (single launch each) and the
+    mp_transform transform/aggregate reordering on a widening layer."""
     from repro.core.config_space import KernelConfig
 
     g = dataset("cora", feat=1, scale=0.25)
@@ -143,6 +145,55 @@ def run_smoke():
          f"|{plan.grid_savings:.1f}x_tighter")
     emit("smoke/geot_pallas_planless", t_pll,
          f"planned_speedup={t_pll / t_pal:.2f}x")
+
+    # -- fused gather-path reduces (one launch each, plan-aware) ----------
+    rng = bench_rng(1)
+    h = jnp.asarray(rng.standard_normal((v, f), np.float32))
+    src = jnp.asarray(g.edge_index[0])
+    w = jnp.asarray(rng.standard_normal(m).astype(np.float32))
+    for red in ("mean", "max"):
+        fused = jax.jit(lambda h, red=red: ops.index_segment_reduce(
+            h, src, dst, v, red, "pallas", None, plan))
+        t = timeit(fused, h, reps=3, warmup=1)
+        emit(f"smoke/geot_pallas_gather_{red}_fused", t,
+             "single_launch|plan_grid")
+    wmean = jax.jit(lambda h: ops.index_weight_segment_reduce(
+        h, src, w, dst, v, "mean", "pallas", None, plan))
+    t = timeit(wmean, h, reps=3, warmup=1)
+    emit("smoke/geot_pallas_gather_mean_weighted_fused", t, "single_launch")
+    logits = jnp.asarray(rng.standard_normal((m, 4)).astype(np.float32))
+    softmax = jax.jit(lambda e: ops.segment_softmax(
+        e, dst, v, "pallas", None, plan))
+    t = timeit(softmax, logits, reps=3, warmup=1)
+    emit("smoke/geot_pallas_segment_softmax", t, "heads=4|single_launch")
+
+    # -- mp_transform reordering on a widening layer (d_in < d_out) -------
+    from repro.core.mp import choose_order, mp_transform
+    d_in, d_out = 32, 256
+    xw = jnp.asarray(rng.standard_normal((v, d_in), np.float32))
+    wide_plan = make_plan(g.edge_index[1], v, feat=d_in, config=cfg)
+    wmat = jnp.asarray(rng.standard_normal((d_in, d_out), np.float32)
+                       / np.sqrt(d_in))
+    ei = jnp.asarray(g.edge_index)
+    picked = choose_order(d_in, d_out, plan=wide_plan)
+    times = {}
+    for order in ("aggregate_first", "transform_first"):
+        fn = jax.jit(lambda x, order=order: mp_transform(
+            x, wmat, ei, v, reduce="sum", impl="pallas", plan=wide_plan,
+            order=order))
+        # warmup=2: the first post-compile call still pays allocator warmup,
+        # which would otherwise swamp the ~2x SpMM-width difference
+        times[order] = timeit(fn, xw, reps=5, warmup=2)
+    other = ("transform_first" if picked == "aggregate_first"
+             else "aggregate_first")
+    emit("smoke/mp_reorder/aggregate_first", times["aggregate_first"],
+         f"d_in={d_in}_d_out={d_out}")
+    emit("smoke/mp_reorder/transform_first", times["transform_first"],
+         f"d_in={d_in}_d_out={d_out}")
+    emit("smoke/mp_reorder/decision", 0.0,
+         f"picked={picked}|picked_faster="
+         f"{str(times[picked] < times[other]).lower()}|"
+         f"speedup={times[other] / times[picked]:.2f}x")
 
 
 def run_ablation(smoke: bool = True, perfdb_path=None):

@@ -1,6 +1,8 @@
 """End-to-end GNN inference (the paper's §V-F workload): 3-layer GCN /
-GIN / GraphSAGE node classification on Table-II-scale graphs, aggregation
-via GeoT fused ops.
+GIN / GraphSAGE / GAT node classification on Table-II-scale graphs, every
+aggregation routed through the unified ``core/mp.py`` message-passing
+primitive (fused sum/mean/max + segment_softmax kernels on
+``--impl pallas``).
 
 A :class:`~repro.core.plan.SegmentPlan` is built once per graph and reused
 by every layer of every model (the FASTEN-style amortization): the schedule
@@ -8,6 +10,7 @@ metadata and the tight kernel grid are paid for a single time, not per call.
 
     PYTHONPATH=src python examples/gnn_inference.py [--dataset ogbn-arxiv]
                                                     [--impl ref|blocked|pallas]
+                                                    [--heads 4] [--scale 0.25]
 """
 import argparse
 import time
@@ -23,6 +26,13 @@ ap.add_argument("--dataset", default="flickr", choices=all_dataset_names())
 ap.add_argument("--hidden", type=int, default=64)
 ap.add_argument("--impl", default="ref", choices=["ref", "blocked", "pallas"],
                 help="aggregation backend (pallas runs interpreted on CPU)")
+ap.add_argument("--models", default=",".join(gnn.MODELS),
+                help="comma-separated subset of " + ",".join(gnn.MODELS))
+ap.add_argument("--heads", type=int, default=1,
+                help="attention heads for the GAT model (multi-head "
+                     "segment_softmax is one fused launch)")
+ap.add_argument("--scale", type=float, default=1.0,
+                help="scale the dataset's |V|,|E| down (CI smoke runs)")
 ap.add_argument("--no-plan", action="store_true",
                 help="skip the precomputed SegmentPlan (ablation)")
 ap.add_argument("--tune", action="store_true",
@@ -31,7 +41,7 @@ ap.add_argument("--tune", action="store_true",
                      "the generated decision-tree rules")
 args = ap.parse_args()
 
-g = dataset(args.dataset, feat=32)
+g = dataset(args.dataset, feat=32, scale=args.scale)
 print(f"{g.name}: |V|={g.num_nodes:,} |E|={g.num_edges:,}")
 x = jnp.asarray(g.x)
 ei = jnp.asarray(g.edge_index)
@@ -47,8 +57,10 @@ if not args.no_plan:
           f"{plan.worst_case_chunks}, {plan.grid_savings:.1f}x tighter)  "
           f"skew={plan.stats.skew:.1f}  built in {dt*1e3:.1f} ms")
 
-for model in ("gcn", "gin", "sage"):
-    params = gnn.init(jax.random.PRNGKey(0), model, 32, args.hidden, 16)
+for model in args.models.split(","):
+    heads = args.heads if model == "gat" else 1
+    params = gnn.init(jax.random.PRNGKey(0), model, 32, args.hidden, 16,
+                      heads=heads)
     fwd = jax.jit(lambda p, x: gnn.forward(p, model, x, ei, g.num_nodes, dis,
                                            impl=args.impl, plan=plan))
     out = jax.block_until_ready(fwd(params, x))          # compile + run
@@ -57,5 +69,6 @@ for model in ("gcn", "gin", "sage"):
         out = jax.block_until_ready(fwd(params, x))
     dt = (time.perf_counter() - t0) / 3
     pred = jnp.argmax(out, -1)
+    tag = f" heads={heads}" if model == "gat" and heads > 1 else ""
     print(f"  {model:5s}: logits {out.shape}  {dt*1e3:7.1f} ms/inference "
-          f"({args.impl})  classes used: {len(jnp.unique(pred))}")
+          f"({args.impl}{tag})  classes used: {len(jnp.unique(pred))}")

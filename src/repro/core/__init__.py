@@ -23,8 +23,10 @@ from repro.core.ops import (
     segment_reduce,
     segment_softmax,
 )
+from repro.core.mp import choose_order, mp, mp_transform
 
 __all__ = [
+    "mp", "mp_transform", "choose_order",
     "KernelConfig", "all_configs", "default_config",
     "InputFeatures", "extract_features",
     "select_config", "hand_crafted_config",

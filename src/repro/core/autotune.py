@@ -196,7 +196,7 @@ def _runner_segment_reduce(idx_size, num_segments, feat, interpret, seed):
 
 
 def _runner_gather_segment_reduce(idx_size, num_segments, feat, interpret,
-                                  seed):
+                                  seed, reduce: str = "sum"):
     import jax.numpy as jnp
 
     from repro.kernels import ops as kops
@@ -209,8 +209,24 @@ def _runner_gather_segment_reduce(idx_size, num_segments, feat, interpret,
 
     def run(cfg: KernelConfig):
         return lambda: kops.gather_segment_reduce(h, gather_idx, segj,
-                                                  num_segments, config=cfg,
+                                                  num_segments, reduce=reduce,
+                                                  config=cfg,
                                                   interpret=interpret)
+    return run
+
+
+def _runner_segment_softmax(idx_size, num_segments, feat, interpret, seed):
+    import jax.numpy as jnp
+
+    from repro.kernels import ops as kops
+    rng, seg, _ = _synth(idx_size, num_segments, feat, seed)
+    x = jnp.asarray(rng.standard_normal(
+        (idx_size, max(feat, 1))).astype(np.float32))
+    segj = jnp.asarray(seg)
+
+    def run(cfg: KernelConfig):
+        return lambda: kops.segment_softmax(x, segj, num_segments, config=cfg,
+                                            interpret=interpret)
     return run
 
 
@@ -252,6 +268,11 @@ def _runner_sddmm(idx_size, num_segments, feat, interpret, seed):
 _OPS: Dict[str, Callable] = {
     "segment_reduce": _runner_segment_reduce,
     "gather_segment_reduce": _runner_gather_segment_reduce,
+    "gather_segment_reduce_mean": functools.partial(
+        _runner_gather_segment_reduce, reduce="mean"),
+    "gather_segment_reduce_max": functools.partial(
+        _runner_gather_segment_reduce, reduce="max"),
+    "segment_softmax": _runner_segment_softmax,
     "segment_matmul": _runner_segment_matmul,
     "sddmm": _runner_sddmm,
 }
@@ -265,6 +286,12 @@ def config_projection(op: str, cfg: KernelConfig) -> Tuple:
     """The slice of the config an op actually consumes (dedupe key)."""
     if op in _PROJECTED_OPS:
         return ("m_b", cfg.m_b, "n_b", cfg.n_b)
+    if op == "segment_softmax":
+        # the softmax walk ignores schedule/N_b/K_c (heads are one lane tile)
+        return ("s_b", cfg.s_b, "m_b", cfg.m_b)
+    if op == "gather_segment_reduce_max":
+        # max forces the SR walk, so PR lattice points alias their SR twin
+        return ("SR", cfg.s_b, cfg.n_b, cfg.m_b, 1)
     return cfg.astuple()
 
 

@@ -49,6 +49,20 @@ class KernelConfig:
         return 2 * (x_tile + idx_tile) + out_tile + onehot
 
 
+# Tunable op keys: every kernel the selection tiers (PerfDB / generated
+# rules / hand-crafted) may be asked about. The gather variants are distinct
+# keys because their measured profiles differ (mean carries an in-kernel
+# count, max forces the SR walk); segment_softmax consumes only (S_b, M_b).
+OP_KEYS = (
+    "segment_reduce",
+    "gather_segment_reduce",
+    "gather_segment_reduce_mean",
+    "gather_segment_reduce_max",
+    "segment_softmax",
+    "segment_matmul",
+    "sddmm",
+)
+
 # Pruned candidate ranges (paper §III-C prunes to constant space; ours are
 # anchored to (8,128) tiling and MXU dims instead of warp sizes).
 SCHEDULES = ("SR", "PR")

@@ -122,12 +122,16 @@ def useful_flops(m: int, n: int) -> float:
 
 
 def spmm_cost(m: int, s: int, n: int, cfg: KernelConfig,
-              dtype_bytes: int = 4, spec: TpuSpec = V5E) -> CostBreakdown:
+              dtype_bytes: int = 4, spec: TpuSpec = V5E,
+              skew: float = 1.0) -> CostBreakdown:
     """Fused gather + weight + segment reduce (index_weight_segment_reduce).
 
     Adds the gather traffic of H rows (random access ⇒ DMA granularity
-    penalty when N_b*dtype < 512B) and the per-edge multiply."""
-    base = segment_reduce_cost(m, s, n, cfg, dtype_bytes, spec)
+    penalty when N_b*dtype < 512B) and the per-edge multiply. ``skew``
+    (max/avg degree, from a SegmentPlan's stats) inflates the heaviest
+    block's chunk count exactly as in :func:`segment_reduce_cost` — the
+    degree distribution feeds the mp transform/aggregate reordering."""
+    base = segment_reduce_cost(m, s, n, cfg, dtype_bytes, spec, skew=skew)
     n_pad = max(n, LANES)
     n_tiles = _ceil(n_pad, cfg.n_b)
     n_b_eff = min(cfg.n_b, n_pad)

@@ -13,7 +13,7 @@ from __future__ import annotations
 import math
 import warnings
 
-from repro.core.config_space import KernelConfig, default_config
+from repro.core.config_space import OP_KEYS, KernelConfig, default_config
 
 try:  # the generated module is committed, but keep the fallback honest
     from repro.core import _generated_rules
@@ -31,6 +31,8 @@ def select_config(idx_size: int, num_segments: int, feat: int, *,
     cached in the :class:`~repro.core.autotune.PerfDB` thereafter);
     ``tune=False`` pins the selection to the generated rules. ``db`` is an
     optional explicit PerfDB (tests / hermetic CI)."""
+    if op not in OP_KEYS:
+        raise ValueError(f"unknown op {op!r}; registered: {OP_KEYS}")
     if tune is None:
         from repro.core.autotune import autotune_enabled
         tune = autotune_enabled()

@@ -1,0 +1,130 @@
+"""Unified message-passing primitive (the tf_geometric-style map-reduce API
+every GNN layer routes through).
+
+Two entry points:
+
+* :func:`mp` — gather-from-source, reduce-into-destination over a sorted
+  ``edge_index``. One call, every aggregation: ``reduce`` ∈ {sum, mean, max}
+  × {weighted, unweighted}, each a **single fused plan-aware kernel** on the
+  ``pallas`` path (see :mod:`repro.kernels.gather_segment_reduce` — the
+  (|E|, F) message tensor never materializes).
+
+* :func:`mp_transform` — message passing composed with a dense transform
+  ``W``, with the classic GCN **transform/aggregate reordering** applied
+  per layer:
+
+      aggregate(X) @ W        (aggregate-first)   SpMM width = d_in
+      aggregate(X @ W)        (transform-first)   SpMM width = d_out
+
+  The dense matmul costs |V|·d_in·d_out either way; only the SpMM width
+  changes, so aggregate-first wins when d_in < d_out (both rounded up to
+  the 128-lane tile) and vice versa. :func:`choose_order` decides from the
+  v5e cost model (:func:`repro.core.costmodel.spmm_cost`) fed with the
+  plan's degree statistics (skew inflates the heaviest block's chunk
+  count). Reordering is only valid for *linear* reduces (sum / mean,
+  weighted or not — they commute with ``W``); ``max`` pins transform-first.
+
+``reduce="max"`` fills empty-neighbourhood rows with 0 (the PyG convention
+for model code) rather than the segment_max identity -inf; use the core ops
+directly if the identity matters.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.core import ops as geot
+from repro.core.config_space import KernelConfig
+
+__all__ = ["mp", "mp_transform", "choose_order"]
+
+_LINEAR_REDUCES = ("sum", "mean")
+
+
+def mp(x, edge_index, num_nodes: int, *, reduce: str = "sum",
+       edge_weight=None, plan=None, impl: str = "ref",
+       config: Optional[KernelConfig] = None):
+    """Message passing: Y[d] = reduce_{(s,d) ∈ E} (w_e ·) X[s].
+
+    ``edge_index``: (2, E) with ``edge_index[1]`` (destinations) sorted
+    non-decreasing; ``plan``: SegmentPlan over the destinations, shared by
+    every layer of a model (and by the custom-VJP backward passes)."""
+    if reduce not in ("sum", "mean", "max"):
+        raise ValueError(f"unknown reduce: {reduce!r}")
+    src, dst = edge_index[0], edge_index[1]
+    if edge_weight is None:
+        y = geot.index_segment_reduce(x, src, dst, num_nodes, reduce, impl,
+                                      config, plan)
+    else:
+        y = geot.index_weight_segment_reduce(x, src, edge_weight, dst,
+                                             num_nodes, reduce, impl, config,
+                                             plan)
+    if reduce == "max":
+        # empty neighbourhoods come back as the segment_max identity -inf;
+        # models want 0 there. Replace exactly -inf (not every non-finite
+        # value) so legitimate +inf/NaN aggregates still surface downstream.
+        y = jnp.where(y == -jnp.inf, jnp.zeros_like(y), y)
+    return y
+
+
+def choose_order(d_in: int, d_out: int, *, plan=None,
+                 num_edges: Optional[int] = None,
+                 num_nodes: Optional[int] = None,
+                 config: Optional[KernelConfig] = None) -> str:
+    """FLOP/roofline decision: ``"aggregate_first"`` or
+    ``"transform_first"``.
+
+    Compares the modelled SpMM cost at width ``d_in`` (aggregate-first) vs
+    ``d_out`` (transform-first); the |V|·d_in·d_out dense matmul is common
+    to both orders and cancels. With a ``plan``, |E|, |V|, the selected
+    config, and the degree skew all come from its precomputed statistics;
+    otherwise ``num_edges``/``num_nodes`` must be given."""
+    from repro.core import costmodel
+
+    if plan is not None:
+        m, s = plan.stats.num_rows, plan.stats.num_segments
+        skew = plan.stats.skew
+        cfg = config or plan.config
+    else:
+        if num_edges is None or num_nodes is None:
+            raise ValueError("choose_order needs a plan or "
+                             "num_edges + num_nodes")
+        m, s, skew = int(num_edges), int(num_nodes), 1.0
+        cfg = config
+    if cfg is None:
+        from repro.core.heuristics import select_config
+        cfg = select_config(max(m, 1), max(s, 1), max(d_in, d_out))
+    t_agg_first = costmodel.spmm_cost(m, s, d_in, cfg, skew=skew).total_s
+    t_tr_first = costmodel.spmm_cost(m, s, d_out, cfg, skew=skew).total_s
+    return "aggregate_first" if t_agg_first < t_tr_first else "transform_first"
+
+
+def mp_transform(x, w, edge_index, num_nodes: int, *, reduce: str = "sum",
+                 edge_weight=None, plan=None, impl: str = "ref",
+                 config: Optional[KernelConfig] = None, order: str = "auto"):
+    """Message passing fused with a dense transform: aggregate(X·W) or
+    aggregate(X)·W, whichever the cost model prefers (``order="auto"``).
+
+    ``order`` ∈ {"auto", "aggregate_first", "transform_first"} — pin it for
+    ablation benchmarks. Non-linear reduces (``max``) do not commute with
+    ``W`` and always run transform-first."""
+    if order not in ("auto", "aggregate_first", "transform_first"):
+        raise ValueError(f"unknown order: {order!r}")
+    d_in, d_out = int(x.shape[-1]), int(w.shape[-1])
+    if reduce not in _LINEAR_REDUCES:
+        if order == "aggregate_first":
+            raise ValueError(
+                f"reduce={reduce!r} does not commute with the transform; "
+                "aggregate_first would compute a different function")
+        order = "transform_first"
+    elif order == "auto":
+        order = choose_order(d_in, d_out, plan=plan,
+                             num_edges=int(edge_index.shape[-1]),
+                             num_nodes=num_nodes, config=config)
+    if order == "aggregate_first":
+        agg = mp(x, edge_index, num_nodes, reduce=reduce,
+                 edge_weight=edge_weight, plan=plan, impl=impl, config=config)
+        return agg @ w
+    return mp(x @ w, edge_index, num_nodes, reduce=reduce,
+              edge_weight=edge_weight, plan=plan, impl=impl, config=config)

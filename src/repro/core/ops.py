@@ -197,6 +197,15 @@ def _segment_reduce_fwd(x, idx, num_segments, reduce, impl, config, plan=None):
     return y, res
 
 
+def _split_ties(y_bar, winner, idx, num_segments):
+    """Max backward: divide each output's cotangent by its winner count so
+    tied rows (duplicate edges / equal messages) share — not multiply —
+    the gradient. Σ over the segment stays y_bar, a valid subgradient."""
+    nwin = jax.ops.segment_sum(winner, idx, num_segments,
+                               indices_are_sorted=True)
+    return y_bar / jnp.maximum(nwin, 1.0)
+
+
 def _segment_reduce_bwd(num_segments, reduce, impl, config, res, y_bar):
     if reduce == "sum":
         (idx,) = res
@@ -207,7 +216,8 @@ def _segment_reduce_bwd(num_segments, reduce, impl, config, res, y_bar):
         return (jnp.take(y_bar * scale[:, None], idx, axis=0), None, None)
     idx, x, y = res
     winner = (x == jnp.take(y, idx, axis=0)).astype(y_bar.dtype)
-    return (winner * jnp.take(y_bar, idx, axis=0), None, None)
+    g = jnp.take(_split_ties(y_bar, winner, idx, num_segments), idx, axis=0)
+    return (winner * g, None, None)
 
 
 segment_reduce.defvjp(_segment_reduce_fwd, _segment_reduce_bwd)
@@ -252,25 +262,13 @@ def index_segment_reduce(h, gather_idx, seg_idx, num_segments: int,
     (|E|, N) message tensor never hits DRAM (format-agnostic SpMM with unit
     weights). ``plan``: precomputed SegmentPlan over ``seg_idx``."""
     if impl == "pallas":
+        # one fused launch for every reduce — sum, mean (count lives inside
+        # the kernel), max (SR running-maximum walk); see
+        # kernels/gather_segment_reduce.py
         from repro.kernels import ops as kops
-        if reduce == "sum":
-            return kops.gather_segment_reduce(h, gather_idx, seg_idx,
-                                              num_segments, config=config,
-                                              plan=plan)
-        if reduce == "mean":
-            # fused sum + count normalization (schedule unchanged, paper §VI)
-            s = kops.gather_segment_reduce(h, gather_idx, seg_idx,
-                                           num_segments, config=config,
-                                           plan=plan)
-            cnt = jax.ops.segment_sum(
-                jnp.ones((seg_idx.shape[0],), jnp.float32), seg_idx,
-                num_segments, indices_are_sorted=True)
-            return (s.astype(jnp.float32)
-                    / jnp.maximum(cnt, 1.0)[:, None]).astype(h.dtype)
-        # max: no fused path — gather then blocked-SR max kernel
-        msg = jnp.take(h, gather_idx, axis=0)
-        return kops.segment_reduce(msg, seg_idx, num_segments, reduce=reduce,
-                                   config=config, plan=plan)
+        return kops.gather_segment_reduce(h, gather_idx, seg_idx,
+                                          num_segments, reduce=reduce,
+                                          config=config, plan=plan)
     msg = jnp.take(h, gather_idx, axis=0)
     return _dispatch_segment_reduce(msg, seg_idx, num_segments, reduce,
                                     "ref" if impl == "ref" else impl, config,
@@ -292,10 +290,11 @@ def _isr_bwd(num_segments, reduce, impl, config, res, y_bar):
         cnt = jax.ops.segment_sum(jnp.ones_like(seg_idx, dtype=y_bar.dtype),
                                   seg_idx, num_segments, indices_are_sorted=True)
         g_edges = jnp.take(y_bar / jnp.maximum(cnt, 1.0)[:, None], seg_idx, axis=0)
-    else:  # max
+    else:  # max: winner rows share the cotangent (equal split over ties)
         msg = jnp.take(h, gather_idx, axis=0)
         winner = (msg == jnp.take(y, seg_idx, axis=0)).astype(y_bar.dtype)
-        g_edges = winner * jnp.take(y_bar, seg_idx, axis=0)
+        g_edges = winner * jnp.take(
+            _split_ties(y_bar, winner, seg_idx, num_segments), seg_idx, axis=0)
     dh = jnp.zeros_like(h).at[gather_idx].add(g_edges)
     return (dh, None, None, None)
 
@@ -303,43 +302,71 @@ def _isr_bwd(num_segments, reduce, impl, config, res, y_bar):
 index_segment_reduce.defvjp(_isr_fwd, _isr_bwd)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7))
 def index_weight_segment_reduce(h, gather_idx, weight, seg_idx,
-                                num_segments: int, impl: str = "ref",
+                                num_segments: int, reduce: str = "sum",
+                                impl: str = "ref",
                                 config: Optional[KernelConfig] = None,
                                 plan=None):
-    """Weighted fused message+aggregate ≡ SpMM (paper §IV):
+    """Weighted fused message+aggregate (paper §IV):
 
-        Y[s] = Σ_{i: seg_idx[i]==s} w[i] * H[gather_idx[i]]
+        Y[s] = reduce_{i: seg_idx[i]==s} w[i] * H[gather_idx[i]]
 
-    With (seg_idx, gather_idx, w) a sorted COO sparse matrix A, this is
-    Y = A @ H — cuSPARSE's workload, format-agnostic. ``plan``: precomputed
+    With ``reduce="sum"`` and (seg_idx, gather_idx, w) a sorted COO sparse
+    matrix A, this is Y = A @ H — cuSPARSE's workload, format-agnostic.
+    ``mean``/``max`` reduce over the weighted messages (mean divides by the
+    row count, the reference-oracle semantics). ``plan``: precomputed
     SegmentPlan over ``seg_idx``."""
     if impl == "pallas":
         from repro.kernels import ops as kops
         return kops.gather_segment_reduce(h, gather_idx, seg_idx, num_segments,
-                                          weight=weight, config=config,
-                                          plan=plan)
+                                          weight=weight, reduce=reduce,
+                                          config=config, plan=plan)
     msg = jnp.take(h, gather_idx, axis=0) * weight[:, None].astype(h.dtype)
-    return _dispatch_segment_reduce(msg, seg_idx, num_segments, "sum",
+    return _dispatch_segment_reduce(msg, seg_idx, num_segments, reduce,
                                     "ref" if impl == "ref" else impl, config,
                                     plan)
 
 
-def _iwsr_fwd(h, gather_idx, weight, seg_idx, num_segments, impl, config,
-              plan=None):
+def _iwsr_fwd(h, gather_idx, weight, seg_idx, num_segments, reduce, impl,
+              config, plan=None):
     y = index_weight_segment_reduce(h, gather_idx, weight, seg_idx,
-                                    num_segments, impl, config, plan)
-    return y, (h, gather_idx, weight, seg_idx)
+                                    num_segments, reduce, impl, config, plan)
+    # only max's winner mask reads y back — don't pin an (S, N) residual
+    # through the backward pass of the common sum/mean paths
+    return y, (h, gather_idx, weight, seg_idx,
+               y if reduce == "max" else None)
 
 
-def _iwsr_bwd(num_segments, impl, config, res, y_bar):
-    h, gather_idx, weight, seg_idx = res
-    g_seg = jnp.take(y_bar, seg_idx, axis=0)
+def _iwsr_bwd(num_segments, reduce, impl, config, res, y_bar):
+    h, gather_idx, weight, seg_idx, y = res
+    # d(msg) with msg[i] = w[i]·H[g[i]]: per-reduce cotangent routed to edges
+    if reduce == "sum":
+        g_msg = jnp.take(y_bar, seg_idx, axis=0)
+    elif reduce == "mean":
+        cnt = jax.ops.segment_sum(jnp.ones_like(seg_idx, dtype=y_bar.dtype),
+                                  seg_idx, num_segments,
+                                  indices_are_sorted=True)
+        g_msg = jnp.take(y_bar / jnp.maximum(cnt, 1.0)[:, None], seg_idx,
+                         axis=0)
+    else:  # max: winner rows share the cotangent (equal split over ties)
+        # the winner recompute must mirror the forward's arithmetic exactly,
+        # or low-precision runs silently zero the mask: the pallas kernel
+        # multiplies in f32 and casts the result, the jnp paths cast the
+        # weight to h.dtype first and multiply in h.dtype
+        if impl == "pallas":
+            msg = (jnp.take(h, gather_idx, axis=0).astype(jnp.float32)
+                   * weight[:, None].astype(jnp.float32)).astype(y.dtype)
+        else:
+            msg = (jnp.take(h, gather_idx, axis=0)
+                   * weight[:, None].astype(h.dtype))
+        winner = (msg == jnp.take(y, seg_idx, axis=0)).astype(y_bar.dtype)
+        g_msg = winner * jnp.take(
+            _split_ties(y_bar, winner, seg_idx, num_segments), seg_idx, axis=0)
     dh = jnp.zeros_like(h).at[gather_idx].add(
-        g_seg * weight[:, None].astype(y_bar.dtype))
+        g_msg * weight[:, None].astype(y_bar.dtype))
     # dW = SDDMM: per-edge dot of gathered rows (paper §VI)
-    dw = jnp.sum(jnp.take(h, gather_idx, axis=0).astype(y_bar.dtype) * g_seg,
+    dw = jnp.sum(jnp.take(h, gather_idx, axis=0).astype(y_bar.dtype) * g_msg,
                  axis=-1).astype(weight.dtype)
     return (dh, None, dw, None, None)
 
@@ -354,13 +381,45 @@ def sddmm(h_out, h_in, row_idx, col_idx):
                    jnp.take(h_in, col_idx, axis=0), axis=-1)
 
 
-def segment_softmax(x, idx, num_segments: int):
-    """Softmax within segments (GAT-style attention over sorted edges)."""
+def _segment_softmax_ref(x, idx, num_segments: int):
+    """Three-pass jnp oracle: segment_max → exp → segment_sum → normalize."""
     m = jax.ops.segment_max(x, idx, num_segments, indices_are_sorted=True)
     m = jnp.where(jnp.isfinite(m), m, 0.0)
     e = jnp.exp(x - jnp.take(m, idx, axis=0))
     z = jax.ops.segment_sum(e, idx, num_segments, indices_are_sorted=True)
     return e / jnp.take(jnp.maximum(z, 1e-20), idx, axis=0)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def segment_softmax(x, idx, num_segments: int, impl: str = "ref",
+                    config: Optional[KernelConfig] = None, plan=None):
+    """Softmax within segments (GAT-style attention over sorted edges).
+
+    ``x``: (M,) or (M, H) logits — heads share the segment structure.
+    ``impl="pallas"`` runs the fused plan-aware kernel (one launch, online
+    max/sum-exp — see :mod:`repro.kernels.segment_softmax`); ``"ref"`` /
+    ``"blocked"`` use the three-pass jnp formulation. ``plan``: precomputed
+    SegmentPlan over ``idx``."""
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        return kops.segment_softmax(x, idx, num_segments, config=config,
+                                    plan=plan)
+    return _segment_softmax_ref(x, idx, num_segments)
+
+
+def _ssm_fwd(x, idx, num_segments, impl, config, plan=None):
+    p = segment_softmax(x, idx, num_segments, impl, config, plan)
+    return p, (p, idx)
+
+
+def _ssm_bwd(num_segments, impl, config, res, g):
+    p, idx = res
+    # d softmax: p ⊙ (g − Σ_{segment} p·g), the per-segment Jacobian action
+    t = jax.ops.segment_sum(p * g, idx, num_segments, indices_are_sorted=True)
+    return (p * (g - jnp.take(t, idx, axis=0)), None, None)
+
+
+segment_softmax.defvjp(_ssm_fwd, _ssm_bwd)
 
 
 def segment_matmul(x, group_sizes, w, impl: str = "ref",

@@ -108,6 +108,16 @@ def unbatch_nodes(batched: Graph, values):
             for i in range(batched.num_graphs)]
 
 
+def unbatch_edges(batched: Graph, values):
+    """Split a (E_total, ...) per-edge array back into per-graph arrays
+    (mirror of :func:`unbatch_nodes`, sliced by ``edge_ptr``) — e.g. the
+    per-edge attention coefficients of a batched GAT forward."""
+    if batched.edge_ptr is None:
+        return [values]
+    return [values[batched.edge_ptr[i]:batched.edge_ptr[i + 1]]
+            for i in range(batched.num_graphs)]
+
+
 _TABLE = {name: (v, e) for name, v, e in TABLE_II}
 
 

@@ -1,8 +1,11 @@
 """Pallas TPU kernels for GeoT's compute hot-spots (paper §III/§IV).
 
 segment_reduce          — SR (VPU walk) + PR (MXU one-hot) schedules
-gather_segment_reduce   — fused message+aggregate (format-agnostic SpMM)
+gather_segment_reduce   — fused message+aggregate, reduce ∈ {sum, mean, max}
+                          (format-agnostic SpMM when weighted sum)
+segment_softmax         — fused plan-aware softmax over sorted segments
 segment_matmul          — grouped GEMM over segments (MoE expert FFN)
+sddmm                   — per-edge dot products (the SpMM backward)
 
 Validate vs. :mod:`repro.kernels.ref` oracles; interpret=True on CPU.
 """

@@ -1,13 +1,27 @@
 """Fused message+aggregate Pallas kernel (paper §IV, Listing 2):
 
-    index_segment_reduce        :  Y[s]  = Σ_{i: seg[i]==s}  H[gidx[i]]
-    index_weight_segment_reduce :  Y[s]  = Σ_{i: seg[i]==s}  w[i]·H[gidx[i]]  (≡ SpMM)
+    Y[s] = reduce_{i: seg[i]==s} (w[i]·) H[gidx[i]]     reduce ∈ {sum, mean, max}
 
 The (|E|, N) message tensor never exists in HBM: each chunk's H rows are
 gathered straight into a VMEM staging buffer by per-row async DMA (the TPU
 analogue of the fused gather — H stays unblocked in HBM/ANY memory), then the
 same PR (MXU one-hot) / SR (VPU walk) reduction as
 :mod:`repro.kernels.segment_reduce` consumes the staged tile.
+
+All three reduces are **single-launch** (paper §VI: generalizing the
+reduction type does not change the schedule):
+
+  * ``sum``  — the paper's SpMM (weighted) / message-sum (unweighted);
+  * ``mean`` — per-segment counts are accumulated inside the same kernel
+    (a (S_b, 1) VMEM scratch fed by the one-hot column sums on PR, by a
+    per-open-segment counter on SR) and the output block is divided by
+    them at its final chunk — no second count launch;
+  * ``max``  — SR running-maximum walk with a -inf identity (matching
+    ``jax.ops.segment_max`` on empty segments); a PR request falls back to
+    SR (a one-hot matmul cannot express max).
+
+Weighted variants reduce over ``w[i]·H[gidx[i]]`` (mean divides by the row
+count, matching the reference oracle's "mean of the weighted messages").
 
 Roofline note: per-row DMA granularity is N_b·dtype bytes; below 512 B the
 gather runs below peak HBM bandwidth (modelled in
@@ -65,12 +79,16 @@ def _gather_chunk(gidx_ref, h_ref, xbuf_ref, sem, j: jax.Array, n_b: int):
 
 
 def _pr_body(cf_ref, cc_ref, gidx_ref, idx_ref, w_ref, h_ref, o_ref,
-             xbuf_ref, sem, *, s_b: int, n_b: int, has_weight: bool):
+             xbuf_ref, sem, *scratch, s_b: int, n_b: int, has_weight: bool,
+             reduce: str):
     b, j, k = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    cnt_ref = scratch[0] if reduce == "mean" else None
 
     @pl.when(k == 0)
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
+        if reduce == "mean":
+            cnt_ref[...] = jnp.zeros_like(cnt_ref)
 
     @pl.when(k < cc_ref[b])
     def _compute():
@@ -86,17 +104,35 @@ def _pr_body(cf_ref, cc_ref, gidx_ref, idx_ref, w_ref, h_ref, o_ref,
         o_ref[...] += jax.lax.dot_general(
             onehot, xg, dimension_numbers=(((0,), (0,)), ((), ())),
             preferred_element_type=o_ref.dtype).astype(o_ref.dtype)
+        if reduce == "mean":
+            # column sums of the one-hot == per-segment row counts. Padding
+            # rows carry seg == num_segments: when num_segments % s_b != 0
+            # they DO land in the last block's window and count into (and
+            # divide) the guard row — correct only because the caller
+            # slices the output to [:num_segments].
+            cnt_ref[...] += jnp.sum(onehot.astype(jnp.float32), axis=0)[:, None]
+
+    if reduce == "mean":
+        # normalize once, after the block's last owned chunk accumulated
+        @pl.when(k == cc_ref[b] - 1)
+        def _normalize():
+            o_ref[...] = o_ref[...] / jnp.maximum(cnt_ref[...], 1.0)
 
 
 def _sr_body(cf_ref, cc_ref, gidx_ref, idx_ref, w_ref, h_ref, o_ref,
-             xbuf_ref, sem, acc_ref, st_ref, *, s_b: int, n_b: int,
-             has_weight: bool):
+             xbuf_ref, sem, acc_ref, st_ref, *scratch, s_b: int, n_b: int,
+             has_weight: bool, reduce: str):
     b, j, k = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    cnt_ref, ca_ref = scratch if reduce == "mean" else (None, None)
+    # max identity is -inf, matching jax.ops.segment_max on empty segments
+    init_val = -jnp.inf if reduce == "max" else 0.0
 
     @pl.when(k == 0)
     def _init():
-        o_ref[...] = jnp.zeros_like(o_ref)
+        o_ref[...] = jnp.full_like(o_ref, init_val)
         st_ref[0] = -1
+        if reduce == "mean":
+            cnt_ref[...] = jnp.zeros_like(cnt_ref)
 
     @pl.when(k < cc_ref[b])
     def _compute():
@@ -106,7 +142,13 @@ def _sr_body(cf_ref, cc_ref, gidx_ref, idx_ref, w_ref, h_ref, o_ref,
 
         def flush():
             p = st_ref[0]
-            o_ref[pl.ds(p, 1), :] += acc_ref[...]
+            if reduce == "max":
+                o_ref[pl.ds(p, 1), :] = jnp.maximum(o_ref[pl.ds(p, 1), :],
+                                                    acc_ref[...])
+            else:
+                o_ref[pl.ds(p, 1), :] += acc_ref[...]
+            if reduce == "mean":
+                cnt_ref[pl.ds(p, 1), :] += ca_ref[...]
 
         def walk(i, _):
             r = seg[i] - b * s_b
@@ -125,12 +167,19 @@ def _sr_body(cf_ref, cc_ref, gidx_ref, idx_ref, w_ref, h_ref, o_ref,
 
             @pl.when(jnp.logical_and(in_win, st_ref[0] == r))
             def _():
-                acc_ref[...] += xrow
+                if reduce == "max":
+                    acc_ref[...] = jnp.maximum(acc_ref[...], xrow)
+                else:
+                    acc_ref[...] += xrow
+                if reduce == "mean":
+                    ca_ref[...] += 1.0
 
             @pl.when(jnp.logical_and(in_win, st_ref[0] != r))
             def _():
                 acc_ref[...] = xrow
                 st_ref[0] = r
+                if reduce == "mean":
+                    ca_ref[...] = jnp.ones_like(ca_ref)
 
             return 0
 
@@ -141,16 +190,22 @@ def _sr_body(cf_ref, cc_ref, gidx_ref, idx_ref, w_ref, h_ref, o_ref,
             flush()
             st_ref[0] = -1
 
+    if reduce == "mean":
+        @pl.when(k == cc_ref[b] - 1)
+        def _normalize():
+            o_ref[...] = o_ref[...] / jnp.maximum(cnt_ref[...], 1.0)
+
 
 @functools.partial(
     jax.jit,
     static_argnames=("num_segments", "config", "max_chunks", "interpret",
-                     "has_weight"),
+                     "has_weight", "reduce"),
 )
 def _gather_segment_reduce_impl(h, gather_idx, seg_idx, weight,
                                 num_segments: int, config: KernelConfig,
                                 max_chunks: Optional[int], interpret: bool,
-                                has_weight: bool, plan=None):
+                                has_weight: bool, reduce: str = "sum",
+                                plan=None):
     m = gather_idx.shape[0]
     v, n = h.shape
     s_b, n_b, m_b = config.s_b, config.n_b, config.m_b
@@ -196,19 +251,24 @@ def _gather_segment_reduce_impl(h, gather_idx, seg_idx, weight,
         out_specs=pl.BlockSpec((s_b, n_b), o_map),
     )
     scratch = [pltpu.VMEM((m_b, n_b), h.dtype), pltpu.SemaphoreType.DMA]
+    # fused mean: per-segment row counts live next to the output block
+    cnt_scratch = [pltpu.VMEM((s_b, 1), jnp.float32)] if reduce == "mean" else []
 
     if config.schedule == "PR":
         grid_spec = pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=2, **common, scratch_shapes=scratch)
-        body = functools.partial(_pr_body, s_b=s_b, n_b=n_b,
-                                 has_weight=has_weight)
-    else:
-        grid_spec = pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=2, **common,
-            scratch_shapes=scratch + [pltpu.VMEM((1, n_b), jnp.float32),
-                                      pltpu.SMEM((1,), jnp.int32)])
+            scratch_shapes=scratch + cnt_scratch)
+        body = functools.partial(_pr_body, s_b=s_b, n_b=n_b,
+                                 has_weight=has_weight, reduce=reduce)
+    else:
+        sr_scratch = [pltpu.VMEM((1, n_b), jnp.float32),
+                      pltpu.SMEM((1,), jnp.int32)]
+        if reduce == "mean":
+            sr_scratch += cnt_scratch + [pltpu.VMEM((1, 1), jnp.float32)]
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2, **common, scratch_shapes=scratch + sr_scratch)
         body = functools.partial(_sr_body, s_b=s_b, n_b=n_b,
-                                 has_weight=has_weight)
+                                 has_weight=has_weight, reduce=reduce)
 
     out = pl.pallas_call(
         body,
@@ -221,23 +281,29 @@ def _gather_segment_reduce_impl(h, gather_idx, seg_idx, weight,
 
 
 def gather_segment_reduce_pallas(h, gather_idx, seg_idx, num_segments: int,
-                                 weight=None,
+                                 weight=None, reduce: str = "sum",
                                  config: Optional[KernelConfig] = None,
                                  max_chunks: Optional[int] = None,
                                  interpret: bool = False, plan=None):
-    """Fused Y[s] = Σ_{seg[i]==s} (w[i]·) H[gather_idx[i]]  — format-agnostic
-    SpMM.  seg_idx must be sorted non-decreasing. ``plan``: precomputed
+    """Fused Y[s] = reduce_{seg[i]==s} (w[i]·) H[gather_idx[i]] — one launch
+    for every reduce ∈ {sum, mean, max} (format-agnostic SpMM when sum +
+    weighted).  seg_idx must be sorted non-decreasing. ``plan``: precomputed
     :class:`repro.core.plan.SegmentPlan` over ``seg_idx`` (shared with the
     unfused kernel — both consume the same chunk metadata)."""
+    if reduce not in ("sum", "mean", "max"):
+        raise ValueError(f"unknown reduce: {reduce!r}")
     config, max_chunks = _resolve_plan(plan, int(gather_idx.shape[0]),
                                        num_segments, config, max_chunks)
     if config is None:
         from repro.core.heuristics import select_config
         config = select_config(int(gather_idx.shape[0]), num_segments,
                                int(h.shape[1]))
+    if reduce == "max" and config.schedule == "PR":
+        # a one-hot matmul cannot express max; same tiling, SR walk instead
+        config = KernelConfig("SR", config.s_b, config.n_b, config.m_b, 1)
     has_weight = weight is not None
     if weight is None:
         weight = jnp.ones((gather_idx.shape[0],), jnp.float32)
     return _gather_segment_reduce_impl(h, gather_idx, seg_idx, weight,
                                        num_segments, config, max_chunks,
-                                       interpret, has_weight, plan)
+                                       interpret, has_weight, reduce, plan)

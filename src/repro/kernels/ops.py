@@ -63,14 +63,20 @@ def gather_segment_reduce(h, gather_idx, seg_idx, num_segments: int,
                           config: Optional[KernelConfig] = None,
                           max_chunks: Optional[int] = None,
                           interpret: Optional[bool] = None, plan=None):
-    if reduce != "sum":
-        raise NotImplementedError("fused gather supports sum (paper §IV)")
+    """Fused gather + segment reduction, one launch per reduce ∈
+    {sum, mean, max} (weighted or not) — the mean's count and the max's
+    running maximum live inside the kernel, never as a second launch."""
+    if reduce not in ("sum", "mean", "max"):
+        raise ValueError(f"unknown reduce: {reduce!r} "
+                         "(fused gather supports sum/mean/max)")
     interpret = _default_interpret() if interpret is None else interpret
+    op = ("gather_segment_reduce" if reduce == "sum"
+          else f"gather_segment_reduce_{reduce}")
     config = _resolve_config(config, plan, gather_idx.shape[0], num_segments,
-                             h.shape[-1], "gather_segment_reduce")
+                             h.shape[-1], op)
     return gather_segment_reduce_pallas(h, gather_idx, seg_idx, num_segments,
-                                        weight=weight, config=config,
-                                        max_chunks=max_chunks,
+                                        weight=weight, reduce=reduce,
+                                        config=config, max_chunks=max_chunks,
                                         interpret=interpret, plan=plan)
 
 
@@ -93,12 +99,33 @@ def segment_matmul(x, group_sizes, w, config: Optional[KernelConfig] = None,
 
 
 def sddmm(a, b, row_idx, col_idx, config: Optional[KernelConfig] = None,
-          interpret: Optional[bool] = None):
+          interpret: Optional[bool] = None, plan=None):
+    """Per-edge dot products. ``plan=`` is accepted for API symmetry with
+    the reduction ops: only its selected config is consumed (SDDMM is a
+    pure gather — a SegmentPlan's chunk metadata describes a sorted segment
+    index, which SDDMM neither requires nor reads)."""
     from repro.kernels.sddmm import sddmm_pallas
     interpret = _default_interpret() if interpret is None else interpret
+    if config is None and plan is not None:
+        config = plan.config
     if config is None:
         from repro.core.heuristics import select_config
         config = select_config(int(row_idx.shape[0]), int(a.shape[0]),
                                int(a.shape[-1]), op="sddmm")
     return sddmm_pallas(a, b, row_idx, col_idx, m_b=config.m_b,
                         n_b=config.n_b, interpret=interpret)
+
+
+def segment_softmax(x, idx, num_segments: int,
+                    config: Optional[KernelConfig] = None,
+                    max_chunks: Optional[int] = None,
+                    interpret: Optional[bool] = None, plan=None):
+    """Fused plan-aware softmax within sorted segments ((M,) or (M, H))."""
+    from repro.kernels.segment_softmax import segment_softmax_pallas
+    interpret = _default_interpret() if interpret is None else interpret
+    feat = int(x.shape[-1]) if x.ndim > 1 else 1
+    config = _resolve_config(config, plan, idx.shape[0], num_segments, feat,
+                             "segment_softmax")
+    return segment_softmax_pallas(x, idx, num_segments, config=config,
+                                  max_chunks=max_chunks, interpret=interpret,
+                                  plan=plan)

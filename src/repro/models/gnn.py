@@ -1,10 +1,21 @@
-"""Message-passing GNNs on GeoT ops (paper §V: GCN, GIN, GraphSAGE; +GAT).
+"""Message-passing GNNs on the unified :mod:`repro.core.mp` primitive
+(paper §V: GCN, GIN, GraphSAGE; + multi-head GAT).
 
 Graphs are tensors (format-agnostic, §IV): ``edge_index`` (2, E) with
 ``edge_index[1]`` (destinations) sorted non-decreasing — the PyG convention
-the paper relies on.  Aggregation is ``index_segment_reduce`` /
-``index_weight_segment_reduce`` (fused message+aggregate) throughout; no
-sparse formats anywhere.
+the paper relies on.
+
+Every layer shares one signature
+
+    layer(prm, x, edge_index, num_nodes, deg_inv_sqrt=None, *,
+          impl="ref", plan=None)
+
+and routes its aggregation through ``mp`` / ``mp_transform``: on the
+``pallas`` path every reduce (sum / mean / max, weighted or not) and the
+GAT ``segment_softmax`` is a single fused plan-aware kernel, and layers
+whose aggregation commutes with their dense transform (GCN, SAGE's
+neighbour branch) let ``mp_transform`` reorder transform vs aggregate by
+the cost model (aggregate-first when d_in < d_out).
 """
 from __future__ import annotations
 
@@ -14,6 +25,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import ops as geot
+from repro.core.mp import mp as mp_agg
+from repro.core.mp import mp_transform
 from repro.models.params import P, dense_init, zeros_init
 
 
@@ -32,27 +45,29 @@ def make_model_plan(edge_index, num_nodes: int, feat: int,
 
 
 # ---------------------------------------------------------------------------
-# layers (paper Listing 2 style)
+# layers (paper Listing 2 style) — one uniform signature, all on core.mp
 # ---------------------------------------------------------------------------
 
-def gcn_layer_init(key, d_in: int, d_out: int, dtype=jnp.float32):
+def gcn_layer_init(key, d_in: int, d_out: int, dtype=jnp.float32, **_):
     return {"w": dense_init(key, d_in, d_out, ("embed", "mlp"), dtype),
             "b": zeros_init((d_out,), ("mlp",), dtype)}
 
 
-def gcn_layer(prm, x, edge_index, deg_inv_sqrt, num_nodes: int,
+def gcn_layer(prm, x, edge_index, num_nodes: int, deg_inv_sqrt=None, *,
               impl: str = "ref", plan=None):
-    """GCN: Y = D^{-1/2} A D^{-1/2} X W — SpMM with weights = normalized
-    coefficients, i.e. index_weight_segment_reduce (paper §IV / Fig. 10)."""
+    """GCN: Y = D^{-1/2} A D^{-1/2} X W — weighted-sum message passing with
+    the transform/aggregate order picked by the cost model (paper §IV /
+    Fig. 10; aggregate-first when the layer widens)."""
+    if deg_inv_sqrt is None:
+        raise ValueError("gcn_layer needs deg_inv_sqrt")
     src, dst = edge_index[0], edge_index[1]
-    h = x @ prm["w"].value
-    w = deg_inv_sqrt[src] * deg_inv_sqrt[dst]
-    out = geot.index_weight_segment_reduce(h, src, w, dst, num_nodes,
-                                           impl=impl, plan=plan)
+    w_e = deg_inv_sqrt[src] * deg_inv_sqrt[dst]
+    out = mp_transform(x, prm["w"].value, edge_index, num_nodes,
+                       reduce="sum", edge_weight=w_e, plan=plan, impl=impl)
     return out + prm["b"].value
 
 
-def gin_layer_init(key, d_in: int, d_out: int, dtype=jnp.float32):
+def gin_layer_init(key, d_in: int, d_out: int, dtype=jnp.float32, **_):
     k1, k2 = jax.random.split(key)
     return {
         "mlp1": dense_init(k1, d_in, d_out, ("embed", "mlp"), dtype),
@@ -63,51 +78,70 @@ def gin_layer_init(key, d_in: int, d_out: int, dtype=jnp.float32):
     }
 
 
-def gin_layer(prm, x, edge_index, num_nodes: int, impl: str = "ref",
-              plan=None):
-    """GIN: h' = MLP((1+ε)·h + Σ_neighbors h) — unweighted fused aggregate."""
-    src, dst = edge_index[0], edge_index[1]
-    agg = geot.index_segment_reduce(x, src, dst, num_nodes, impl=impl,
-                                    plan=plan)
+def gin_layer(prm, x, edge_index, num_nodes: int, deg_inv_sqrt=None, *,
+              impl: str = "ref", plan=None):
+    """GIN: h' = MLP((1+ε)·h + Σ_neighbors h) — unweighted fused sum.
+    The MLP is non-linear, so there is no reordering opportunity."""
+    agg = mp_agg(x, edge_index, num_nodes, reduce="sum", plan=plan,
+                 impl=impl)
     h = (1.0 + prm["eps"].value) * x + agg
     h = jax.nn.relu(h @ prm["mlp1"].value + prm["b1"].value)
     return h @ prm["mlp2"].value + prm["b2"].value
 
 
-def sage_layer_init(key, d_in: int, d_out: int, dtype=jnp.float32):
+def sage_layer_init(key, d_in: int, d_out: int, dtype=jnp.float32, **_):
     k1, k2 = jax.random.split(key)
     return {"w_self": dense_init(k1, d_in, d_out, ("embed", "mlp"), dtype),
             "w_neigh": dense_init(k2, d_in, d_out, ("embed", "mlp"), dtype),
             "b": zeros_init((d_out,), ("mlp",), dtype)}
 
 
-def sage_layer(prm, x, edge_index, num_nodes: int, impl: str = "ref",
-               plan=None):
-    """GraphSAGE (mean aggregator)."""
-    src, dst = edge_index[0], edge_index[1]
-    agg = geot.index_segment_reduce(x, src, dst, num_nodes, reduce="mean",
-                                    impl=impl, plan=plan)
-    return (x @ prm["w_self"].value + agg @ prm["w_neigh"].value
-            + prm["b"].value)
+def sage_layer(prm, x, edge_index, num_nodes: int, deg_inv_sqrt=None, *,
+               impl: str = "ref", plan=None):
+    """GraphSAGE (mean aggregator): one fused mean kernel on the pallas
+    path (no sum+count pair), with the neighbour transform reorderable
+    (mean commutes with W)."""
+    neigh = mp_transform(x, prm["w_neigh"].value, edge_index, num_nodes,
+                         reduce="mean", plan=plan, impl=impl)
+    return x @ prm["w_self"].value + neigh + prm["b"].value
 
 
-def gat_layer_init(key, d_in: int, d_out: int, dtype=jnp.float32):
+def gat_layer_init(key, d_in: int, d_out: int, dtype=jnp.float32,
+                   heads: int = 1):
+    """Multi-head GAT parameters: W projects to ``heads`` blocks of d_out;
+    per-head attention vectors a_src/a_dst of shape (heads, d_out)."""
     k1, k2, k3 = jax.random.split(key, 3)
-    return {"w": dense_init(k1, d_in, d_out, ("embed", "mlp"), dtype),
-            "a_src": dense_init(k2, d_out, 1, ("mlp", None), dtype),
-            "a_dst": dense_init(k3, d_out, 1, ("mlp", None), dtype)}
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d_out, jnp.float32))
+    return {
+        "w": dense_init(k1, d_in, heads * d_out, ("embed", "mlp"), dtype),
+        "a_src": P(jax.random.normal(k2, (heads, d_out), dtype)
+                   * scale.astype(dtype), ("heads", "mlp")),
+        "a_dst": P(jax.random.normal(k3, (heads, d_out), dtype)
+                   * scale.astype(dtype), ("heads", "mlp")),
+    }
 
 
-def gat_layer(prm, x, edge_index, num_nodes: int, impl: str = "ref",
-              plan=None):
-    """Single-head GAT: attention coefficients via segment_softmax over the
-    sorted destination segments."""
+def gat_layer(prm, x, edge_index, num_nodes: int, deg_inv_sqrt=None, *,
+              impl: str = "ref", plan=None):
+    """Multi-head GAT: per-head attention via one fused multi-head
+    ``segment_softmax`` launch (heads ride the lane dimension), then one
+    α-weighted fused sum per head (heads block the feature dim). Head
+    outputs are averaged, so the layer's output width is d_out for any
+    ``heads`` — heads=1 reproduces the single-head layer exactly."""
     src, dst = edge_index[0], edge_index[1]
-    h = x @ prm["w"].value
-    alpha = (h @ prm["a_src"].value)[src, 0] + (h @ prm["a_dst"].value)[dst, 0]
-    alpha = geot.segment_softmax(jax.nn.leaky_relu(alpha, 0.2), dst, num_nodes)
-    return geot.index_weight_segment_reduce(h, src, alpha, dst, num_nodes,
-                                            impl=impl, plan=plan)
+    heads, d_out = prm["a_src"].value.shape
+    h = x @ prm["w"].value                                  # (V, heads*d_out)
+    hh = h.reshape(h.shape[0], heads, d_out)
+    logit_src = jnp.einsum("vhd,hd->vh", hh, prm["a_src"].value)
+    logit_dst = jnp.einsum("vhd,hd->vh", hh, prm["a_dst"].value)
+    e = jax.nn.leaky_relu(logit_src[src] + logit_dst[dst], 0.2)  # (E, heads)
+    alpha = geot.segment_softmax(e, dst, num_nodes, impl, None, plan)
+    out = 0.0
+    for i in range(heads):
+        out = out + mp_agg(hh[:, i, :], edge_index, num_nodes,
+                           reduce="sum", edge_weight=alpha[:, i],
+                           plan=plan, impl=impl)
+    return out / heads
 
 
 # ---------------------------------------------------------------------------
@@ -119,13 +153,18 @@ _LAYER = {"gcn": (gcn_layer_init, gcn_layer),
           "sage": (sage_layer_init, sage_layer),
           "gat": (gat_layer_init, gat_layer)}
 
+MODELS = tuple(_LAYER)
+
 
 def init(key, model: str, d_in: int, hidden: int, num_classes: int,
-         num_layers: int = 3, dtype=jnp.float32):
+         num_layers: int = 3, dtype=jnp.float32, heads: int = 1):
+    """``heads`` > 1 builds multi-head attention layers (GAT only; the other
+    families ignore it — head outputs are averaged so widths are unchanged)."""
     init_fn, _ = _LAYER[model]
     dims = [d_in] + [hidden] * (num_layers - 1) + [num_classes]
     ks = jax.random.split(key, num_layers)
-    return [init_fn(k, dims[i], dims[i + 1], dtype)
+    kwargs = {"heads": heads} if model == "gat" else {}
+    return [init_fn(k, dims[i], dims[i + 1], dtype, **kwargs)
             for i, k in enumerate(ks)]
 
 
@@ -134,15 +173,13 @@ def forward(params, model: str, x, edge_index, num_nodes: int,
             plan=None):
     """``plan``: one :class:`~repro.core.plan.SegmentPlan` built on this
     graph's destinations — reused by every layer (and, via the custom VJPs,
-    by the backward pass)."""
+    by the backward pass). One uniform layer call for every family — no
+    per-model special-casing."""
     _, layer_fn = _LAYER[model]
     h = x
     for i, prm in enumerate(params):
-        if model == "gcn":
-            h = layer_fn(prm, h, edge_index, deg_inv_sqrt, num_nodes, impl,
-                         plan)
-        else:
-            h = layer_fn(prm, h, edge_index, num_nodes, impl, plan)
+        h = layer_fn(prm, h, edge_index, num_nodes, deg_inv_sqrt,
+                     impl=impl, plan=plan)
         if i < len(params) - 1:
             h = jax.nn.relu(h)
     return h

@@ -61,6 +61,36 @@ def test_tuned_config_on_lattice_and_vmem_feasible(tmp_path):
     assert res.time_of(res.config) == min(res.timings.values())
 
 
+@pytest.mark.timeout(120)
+@pytest.mark.parametrize("op", ["gather_segment_reduce_mean",
+                                "gather_segment_reduce_max",
+                                "segment_softmax"])
+def test_new_op_keys_are_tunable(tmp_path, op):
+    """The fused-mean/max gather and segment_softmax kernels register their
+    own op keys: a real (tiny, interpreted) sweep runs and caches."""
+    res = tune(op=op, idx_size=96, num_segments=24, feat=4,
+               db=PerfDB(tmp_path), max_configs=2, reps=1, warmup=0)
+    assert res.timings_performed == len(res.timings) == 2
+    again = tune(op=op, idx_size=96, num_segments=24, feat=4,
+                 db=PerfDB(tmp_path))
+    assert again.cache_hit and again.config == res.config
+
+
+def test_select_config_rejects_unregistered_op():
+    with pytest.raises(ValueError):
+        heuristics.select_config(100, 10, 8, op="nope")
+
+
+def test_softmax_config_projection_ignores_schedule():
+    a = KernelConfig("SR", 64, 128, 256, 1)
+    b = KernelConfig("PR", 64, 512, 256, 16)
+    assert config_projection("segment_softmax", a) == \
+        config_projection("segment_softmax", b)
+    assert config_projection("gather_segment_reduce_max", a) == \
+        config_projection("gather_segment_reduce_max",
+                          KernelConfig("PR", 64, 128, 256, 8))
+
+
 # ---------------------------------------------------------------------------
 # cache round-trip
 # ---------------------------------------------------------------------------

@@ -101,6 +101,62 @@ def test_fused_op_grads_match_reference():
         np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
 
 
+def test_max_grad_splits_ties_no_overcount():
+    """Duplicate edges tied at the segment max share the cotangent — the
+    scatter-add must see a total of 1x y_bar per output, not one per tie."""
+    h = jnp.asarray(RNG.standard_normal((4, 3)).astype(np.float32))
+    gidx = jnp.asarray(np.array([2, 2, 1], np.int32))   # edge 0 == edge 1
+    seg = jnp.asarray(np.array([0, 0, 1], np.int32))
+    w = jnp.ones((3,), jnp.float32)
+
+    def f(h, weighted):
+        if weighted:
+            return jnp.sum(ops.index_weight_segment_reduce(
+                h, gidx, w, seg, 2, "max"))
+        return jnp.sum(ops.index_segment_reduce(h, gidx, seg, 2, "max"))
+
+    for weighted in (False, True):
+        dh = jax.grad(f)(h, weighted)
+        # row 2 feeds segment 0 through two tied edges: gradient must be 1
+        np.testing.assert_allclose(np.asarray(dh)[2], 1.0, rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(dh)[1], 1.0, rtol=1e-6)
+
+    # tied rows within one segment of plain segment_reduce
+    x = jnp.asarray(np.array([[5.0], [5.0], [1.0]], np.float32))
+    idx = jnp.asarray(np.array([0, 0, 0], np.int32))
+    dx = jax.grad(lambda x: jnp.sum(ops.segment_reduce(x, idx, 1, "max")))(x)
+    np.testing.assert_allclose(np.asarray(dx)[:, 0], [0.5, 0.5, 0.0])
+
+
+@pytest.mark.parametrize("impl", ["ref", "pallas"])
+@pytest.mark.parametrize("w_dtype", [jnp.bfloat16, jnp.float32])
+def test_weighted_max_grad_nonzero_in_bf16(impl, w_dtype):
+    """The winner mask must mirror the forward's arithmetic per impl —
+    recomputing the message at a different precision than the forward
+    (f32 vs a bf16 product, or vice versa) silently zeroes the grad. Both
+    impls and mixed h/weight dtypes must keep every winning segment's
+    gradient alive."""
+    v, s, m, n = 12, 8, 40, 4
+    h = jnp.asarray(RNG.standard_normal((v, n)), jnp.bfloat16)
+    w = jnp.asarray(RNG.standard_normal(m), w_dtype)
+    gidx = jnp.asarray(RNG.integers(0, v, m).astype(np.int32))
+    seg = jnp.asarray(np.sort(RNG.integers(0, s, m)).astype(np.int32))
+
+    def f(h, w):
+        y = ops.index_weight_segment_reduce(h, gidx, w, seg, s, "max", impl)
+        return jnp.sum(jnp.where(jnp.isfinite(y), y, 0.0).astype(jnp.float32))
+
+    dh, dw = jax.grad(f, (0, 1))(h, w)
+    assert float(jnp.abs(dh.astype(jnp.float32)).sum()) > 0.0
+    assert float(jnp.abs(dw.astype(jnp.float32)).sum()) > 0.0
+    # every live segment has a winner: its cotangent must reach some edge
+    g_msg = jnp.abs(dw.astype(jnp.float32))
+    live = np.unique(np.asarray(seg))
+    reached = np.zeros(s, bool)
+    np.add.at(reached, np.asarray(seg), np.asarray(g_msg) > 0)
+    assert reached[live].all()
+
+
 def test_segment_softmax_normalizes():
     x, idx = _case(300, 40, 1)
     p = ops.segment_softmax(x[:, 0], idx, 40)

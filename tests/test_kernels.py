@@ -63,9 +63,12 @@ def test_segment_reduce_kernel_empty_segments():
         np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)
 
 
+@pytest.mark.parametrize("reduce", ["sum", "mean", "max"])
 @pytest.mark.parametrize("weighted", [False, True])
 @pytest.mark.parametrize("sched", SCHEDS)
-def test_gather_segment_reduce_kernel(weighted, sched):
+def test_gather_segment_reduce_kernel(reduce, weighted, sched):
+    """Every reduce × weighted combo is a single fused launch (PR + max
+    falls back to the SR walk inside the kernel)."""
     m, v, s, n = 400, 90, 60, 20
     seg = np.sort(RNG.integers(0, s, m)).astype(np.int32)
     gidx = RNG.integers(0, v, m).astype(np.int32)
@@ -73,10 +76,39 @@ def test_gather_segment_reduce_kernel(weighted, sched):
     h = jnp.asarray(RNG.standard_normal((v, n)), jnp.float32)
     cfg = KernelConfig(sched, 64, 128, 128, 8)
     got = kops.gather_segment_reduce(h, jnp.asarray(gidx), jnp.asarray(seg),
-                                     s, weight=w, config=cfg, interpret=True)
+                                     s, weight=w, reduce=reduce, config=cfg,
+                                     interpret=True)
     want = ref.gather_segment_reduce(h, jnp.asarray(gidx), jnp.asarray(seg),
-                                     s, weight=w)
+                                     s, weight=w, reduce=reduce)
     np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)
+
+
+def test_gather_segment_reduce_kernel_mean_max_gapped():
+    """Gapped/empty segments: mean divides only live segments (empty → 0),
+    max keeps the segment_max identity (-inf) on empty ones."""
+    m, v, s, n = 200, 50, 500, 12
+    seg = np.sort(RNG.choice(np.arange(0, s, 7), m)).astype(np.int32)
+    gidx = RNG.integers(0, v, m).astype(np.int32)
+    h = jnp.asarray(RNG.standard_normal((v, n)), jnp.float32)
+    cfg = KernelConfig("SR", 64, 128, 64, 1)
+    for reduce in ("mean", "max"):
+        got = kops.gather_segment_reduce(h, jnp.asarray(gidx),
+                                         jnp.asarray(seg), s, reduce=reduce,
+                                         config=cfg, interpret=True)
+        want = ref.gather_segment_reduce(h, jnp.asarray(gidx),
+                                         jnp.asarray(seg), s, reduce=reduce)
+        ga, wa = np.asarray(got), np.asarray(want)
+        mask = np.isfinite(wa)
+        assert np.array_equal(np.isfinite(ga), mask)
+        np.testing.assert_allclose(ga[mask], wa[mask], rtol=3e-4, atol=3e-4)
+
+
+def test_gather_segment_reduce_rejects_unknown_reduce():
+    h = jnp.zeros((4, 8))
+    idx = jnp.zeros(4, jnp.int32)
+    with pytest.raises(ValueError):
+        kops.gather_segment_reduce(h, idx, idx, 4, reduce="prod",
+                                   interpret=True)
 
 
 @pytest.mark.parametrize("m,k,n,e", [(130, 16, 16, 3), (300, 64, 48, 4),
@@ -111,6 +143,44 @@ def test_sddmm_kernel(ra, rb, m, n):
     ci = jnp.asarray(RNG.integers(0, rb, m).astype(np.int32))
     got = kops.sddmm(a, b, ri, ci, interpret=True)
     want = core_ops.sddmm(a, b, ri, ci)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("h_dim", [None, 1, 4])
+def test_segment_softmax_kernel(h_dim):
+    """Fused single-launch softmax vs the three-pass jnp oracle, 1-D and
+    multi-head logits."""
+    from repro.core.ops import _segment_softmax_ref
+    m, s = 300, 40
+    idx = np.sort(RNG.integers(0, s, m)).astype(np.int32)
+    shape = (m,) if h_dim is None else (m, h_dim)
+    x = jnp.asarray(RNG.standard_normal(shape), jnp.float32)
+    got = kops.segment_softmax(x, jnp.asarray(idx), s,
+                               config=KernelConfig("SR", 64, 128, 64, 1),
+                               interpret=True)
+    want = _segment_softmax_ref(x, jnp.asarray(idx), s)
+    assert got.shape == x.shape
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_sddmm_accepts_plan_for_config():
+    """plan= supplies the tiling config only (API symmetry with
+    segment_matmul) — results are identical to the explicit-config call."""
+    from repro.core import ops as core_ops
+    from repro.core.plan import make_plan
+    m, r, n = 300, 40, 16
+    seg = np.sort(RNG.integers(0, 30, m)).astype(np.int32)
+    plan = make_plan(seg, 30, feat=n, config=KernelConfig("SR", 64, 128, 64, 1))
+    a = jnp.asarray(RNG.standard_normal((r, n)), jnp.float32)
+    b = jnp.asarray(RNG.standard_normal((r, n)), jnp.float32)
+    ri = jnp.asarray(RNG.integers(0, r, m).astype(np.int32))
+    ci = jnp.asarray(RNG.integers(0, r, m).astype(np.int32))
+    got = kops.sddmm(a, b, ri, ci, plan=plan, interpret=True)
+    explicit = kops.sddmm(a, b, ri, ci, config=plan.config, interpret=True)
+    want = core_ops.sddmm(a, b, ri, ci)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(explicit))
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=1e-4, atol=1e-4)
 

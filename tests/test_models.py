@@ -118,7 +118,7 @@ def test_gcn_layer_matches_dense():
     deg = np.maximum(np.asarray(a.sum(1)), 1.0)
     dis = jnp.asarray(1.0 / np.sqrt(deg), dtype=jnp.float32)
     prm = gnn.gcn_layer_init(KEY, 8, 5)
-    got = gnn.gcn_layer(prm, x, ei, dis, v)
+    got = gnn.gcn_layer(prm, x, ei, v, dis)
     norm_a = np.asarray(dis)[:, None] * a * np.asarray(dis)[None, :]
     want = norm_a @ np.asarray(x @ prm["w"].value) + np.asarray(prm["b"].value)
     np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4, atol=1e-4)
@@ -151,6 +151,31 @@ def test_gat_attention_sums_to_one():
     prm = gnn.gat_layer_init(KEY, 8, 4)
     out = gnn.gat_layer(prm, x, ei, v)
     assert out.shape == (v, 4) and not bool(jnp.isnan(out).any())
+
+
+def test_gat_multihead_shapes_and_finite():
+    """heads>1: per-head attention + head-averaged output keeps the layer
+    width at d_out; end-to-end forward stays finite."""
+    ei, x, a, v = _graph(seed=5)
+    prm = gnn.gat_layer_init(KEY, 8, 4, heads=3)
+    assert prm["w"].value.shape == (8, 12)
+    assert prm["a_src"].value.shape == (3, 4)
+    out = gnn.gat_layer(prm, x, ei, v)
+    assert out.shape == (v, 4) and not bool(jnp.isnan(out).any())
+    params = gnn.init(KEY, "gat", 8, 16, 4, heads=3)
+    logits = gnn.forward(params, "gat", x, ei, v)
+    assert logits.shape == (v, 4) and not bool(jnp.isnan(logits).any())
+
+
+def test_uniform_layer_signature():
+    """Every family answers the same call — no per-model special-casing."""
+    ei, x, a, v = _graph(seed=6)
+    deg = np.maximum(np.asarray(a.sum(1)), 1.0)
+    dis = jnp.asarray(1.0 / np.sqrt(deg), dtype=jnp.float32)
+    for model in gnn.MODELS:
+        params = gnn.init(KEY, model, 8, 16, 4)
+        out = gnn.forward(params, model, x, ei, v, dis)
+        assert out.shape == (v, 4)
 
 
 def test_gnn_training_decreases_loss():

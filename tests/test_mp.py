@@ -1,0 +1,209 @@
+"""Unified message-passing subsystem (core/mp.py): mp parity across every
+reduce × weighted × impl combo, the FLOP-based transform/aggregate
+reordering, fused segment_softmax numerical stability, and grad checks for
+the fused mean/max VJPs vs the ref oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ops
+from repro.core.config_space import KernelConfig
+from repro.core.mp import choose_order, mp, mp_transform
+from repro.core.plan import make_graph_plan
+
+RNG = np.random.default_rng(23)
+CFG = KernelConfig("SR", 32, 128, 64, 1)
+
+
+def _graph(v=50, e=260, f=8, seed=0, gapped=False):
+    rng = np.random.default_rng(seed)
+    if gapped:
+        dst = np.sort(rng.choice(np.arange(0, v, 5), e)).astype(np.int32)
+    else:
+        dst = np.sort(rng.integers(0, v, e)).astype(np.int32)
+    src = rng.integers(0, v, e).astype(np.int32)
+    ei = np.stack([src, dst])
+    x = jnp.asarray(rng.standard_normal((v, f)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal(e), jnp.float32)
+    plan = make_graph_plan(ei, v, feat=f, config=CFG)
+    return jnp.asarray(ei), x, w, v, plan
+
+
+# ---------------------------------------------------------------------------
+# mp: one primitive, every aggregation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("reduce", ["sum", "mean", "max"])
+@pytest.mark.parametrize("weighted", [False, True])
+def test_mp_pallas_matches_ref(reduce, weighted):
+    ei, x, w, v, plan = _graph(seed=1)
+    ew = w if weighted else None
+    want = mp(x, ei, v, reduce=reduce, edge_weight=ew, impl="ref")
+    got = mp(x, ei, v, reduce=reduce, edge_weight=ew, impl="pallas",
+             plan=plan)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_mp_max_fills_empty_neighbourhoods_with_zero():
+    """mp's max is model-facing: isolated nodes get 0, not the -inf
+    segment_max identity."""
+    ei, x, w, v, plan = _graph(gapped=True, seed=2)
+    for impl, p in (("ref", None), ("pallas", plan)):
+        y = mp(x, ei, v, reduce="max", impl=impl, plan=p)
+        assert bool(jnp.isfinite(y).all())
+        dst = np.asarray(ei[1])
+        empty = np.setdiff1d(np.arange(v), dst)
+        assert empty.size > 0
+        np.testing.assert_array_equal(np.asarray(y)[empty], 0.0)
+
+
+def test_mp_max_preserves_nan_and_posinf():
+    """Only the -inf empty-neighbourhood identity is zero-filled — real NaN
+    (upstream bug) and +inf (sentinel features) aggregates must surface."""
+    ei, x, w, v, plan = _graph(gapped=True, seed=8)
+    x = x.at[0, 0].set(jnp.nan).at[1, 1].set(jnp.inf)
+    y = mp(x, ei, v, reduce="max", impl="ref")
+    src, dst = np.asarray(ei[0]), np.asarray(ei[1])
+    assert bool(jnp.isnan(y[dst[src == 0][0], 0])) or np.all(src != 0)
+    assert not bool(jnp.isneginf(y).any())
+
+
+def test_mp_rejects_unknown_reduce():
+    ei, x, w, v, plan = _graph()
+    with pytest.raises(ValueError):
+        mp(x, ei, v, reduce="median")
+
+
+@pytest.mark.parametrize("reduce", ["sum", "mean", "max"])
+def test_mp_grads_pallas_match_ref(reduce):
+    """Grad checks for the fused (single-launch) mean/max VJPs vs the ref
+    oracle, weighted and unweighted, through the plan."""
+    ei, x, w, v, plan = _graph(seed=3)
+
+    def loss(x, w, impl, p, weighted):
+        y = mp(x, ei, v, reduce=reduce,
+               edge_weight=(w if weighted else None), impl=impl, plan=p)
+        return jnp.sum(jnp.sin(y))
+
+    for weighted in (False, True):
+        g_ref = jax.grad(loss, (0, 1))(x, w, "ref", None, weighted)
+        g_pal = jax.grad(loss, (0, 1))(x, w, "pallas", plan, weighted)
+        for a, b in zip(g_pal, g_ref):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# transform/aggregate reordering
+# ---------------------------------------------------------------------------
+
+def test_choose_order_follows_spmm_width():
+    """Aggregate-first wins iff it narrows the SpMM (past lane padding)."""
+    ei, x, w, v, plan = _graph(seed=4)
+    e = int(ei.shape[1])
+    assert choose_order(32, 256, plan=plan) == "aggregate_first"
+    assert choose_order(256, 32, plan=plan) == "transform_first"
+    # both below the 128-lane tile ⇒ modelled cost ties ⇒ conventional order
+    assert choose_order(8, 16, plan=plan) == "transform_first"
+    # plan-less path takes explicit sizes
+    assert choose_order(32, 256, num_edges=e, num_nodes=v) == "aggregate_first"
+    with pytest.raises(ValueError):
+        choose_order(32, 256)
+
+
+@pytest.mark.parametrize("order", ["aggregate_first", "transform_first",
+                                   "auto"])
+@pytest.mark.parametrize("reduce", ["sum", "mean"])
+def test_mp_transform_orders_agree(order, reduce):
+    """Linear reduces commute with W: both orders (and the auto pick)
+    compute the same layer, ref and pallas."""
+    ei, x, w, v, plan = _graph(seed=5, f=16)
+    wmat = jnp.asarray(RNG.standard_normal((16, 160)) / 4.0, jnp.float32)
+    want = mp(x, ei, v, reduce=reduce, impl="ref") @ wmat
+    got = mp_transform(x, wmat, ei, v, reduce=reduce, impl="pallas",
+                       plan=plan, order=order)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_mp_transform_max_pins_transform_first():
+    """max does not commute with W — auto must not reorder."""
+    ei, x, w, v, plan = _graph(seed=6, f=16)
+    wmat = jnp.asarray(RNG.standard_normal((16, 160)) / 4.0, jnp.float32)
+    got = mp_transform(x, wmat, ei, v, reduce="max", impl="ref", order="auto")
+    want = mp(x @ wmat, ei, v, reduce="max", impl="ref")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+    with pytest.raises(ValueError):
+        mp_transform(x, wmat, ei, v, order="backwards")
+    with pytest.raises(ValueError):   # bogus order must raise for max too
+        mp_transform(x, wmat, ei, v, reduce="max", order="backwards")
+    with pytest.raises(ValueError):   # explicit non-commuting pin rejected
+        mp_transform(x, wmat, ei, v, reduce="max", order="aggregate_first")
+
+
+# ---------------------------------------------------------------------------
+# segment_softmax: numerical stability + grads
+# ---------------------------------------------------------------------------
+
+def _softmax_case(m, s, gapped=False, scale=1.0, heads=None, seed=7):
+    rng = np.random.default_rng(seed)
+    if gapped:
+        idx = np.sort(rng.choice(np.arange(0, s, 7), m)).astype(np.int32)
+    else:
+        idx = np.sort(rng.integers(0, s, m)).astype(np.int32)
+    shape = (m,) if heads is None else (m, heads)
+    x = jnp.asarray(rng.standard_normal(shape) * scale, jnp.float32)
+    return x, jnp.asarray(idx)
+
+
+@pytest.mark.parametrize("impl", ["ref", "pallas"])
+@pytest.mark.parametrize("gapped", [False, True])
+@pytest.mark.parametrize("scale", [1.0, 1e4])
+def test_segment_softmax_stable_and_normalized(impl, gapped, scale):
+    """Empty/gapped segments and large-magnitude logits: the segment-max
+    subtraction (online on the pallas path) must keep every output finite
+    and every live segment summing to 1."""
+    m, s = 260, 300
+    x, idx = _softmax_case(m, s, gapped=gapped, scale=scale)
+    p = ops.segment_softmax(x, idx, s, impl)
+    assert bool(jnp.isfinite(p).all())
+    sums = jax.ops.segment_sum(p, idx, s, indices_are_sorted=True)
+    live = np.unique(np.asarray(idx))
+    np.testing.assert_allclose(np.asarray(sums)[live], 1.0, rtol=1e-5)
+
+
+def test_segment_softmax_pallas_matches_ref_multihead():
+    x, idx = _softmax_case(300, 40, heads=4, scale=30.0)
+    got = ops.segment_softmax(x, idx, 40, "pallas")
+    want = ops.segment_softmax(x, idx, 40, "ref")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_segment_softmax_singleton_segments_are_one():
+    """A segment with a single huge logit softmaxes to exactly 1."""
+    idx = jnp.asarray(np.arange(10, dtype=np.int32))
+    x = jnp.asarray(np.linspace(-1e4, 1e4, 10), jnp.float32)
+    for impl in ("ref", "pallas"):
+        np.testing.assert_allclose(
+            np.asarray(ops.segment_softmax(x, idx, 10, impl)), 1.0)
+
+
+@pytest.mark.parametrize("impl", ["ref", "pallas"])
+def test_segment_softmax_grad_matches_autodiff_oracle(impl):
+    """The custom VJP (p·(g − Σ p·g)) vs autodiff through the three-pass
+    formulation, 1-D and multi-head."""
+    from repro.core.ops import _segment_softmax_ref
+    for heads in (None, 3):
+        x, idx = _softmax_case(200, 30, heads=heads, seed=11)
+
+        def f(x, impl_):
+            return jnp.sum(jnp.sin(ops.segment_softmax(x, idx, 30, impl_)))
+
+        got = jax.grad(f)(x, impl)
+        want = jax.grad(
+            lambda x: jnp.sum(jnp.sin(_segment_softmax_ref(x, idx, 30))))(x)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-5)

@@ -114,13 +114,15 @@ def test_index_segment_reduce_plan_equivalence(impl):
     gidx = jnp.asarray(RNG.integers(0, v, m).astype(np.int32))
     h = jnp.asarray(RNG.standard_normal((v, n)), jnp.float32)
     plan = make_plan(idx, s, feat=n, config=CFG)
-    for reduce in ("sum", "mean"):
+    for reduce in ("sum", "mean", "max"):
         planless = ops.index_segment_reduce(h, gidx, jnp.asarray(idx), s,
                                             reduce, impl, CFG)
         planned = ops.index_segment_reduce(h, gidx, jnp.asarray(idx), s,
                                            reduce, impl, None, plan)
-        np.testing.assert_allclose(np.asarray(planned), np.asarray(planless),
-                                   rtol=3e-4, atol=3e-4)
+        pa, pb = np.asarray(planless), np.asarray(planned)
+        mask = np.isfinite(pa)       # max: empty segments are -inf
+        assert np.array_equal(np.isfinite(pb), mask)
+        np.testing.assert_allclose(pb[mask], pa[mask], rtol=3e-4, atol=3e-4)
 
 
 @pytest.mark.parametrize("impl", ["ref", "blocked", "pallas"])
@@ -132,9 +134,9 @@ def test_index_weight_segment_reduce_plan_equivalence(impl):
     h = jnp.asarray(RNG.standard_normal((v, n)), jnp.float32)
     plan = make_plan(idx, s, feat=n, config=CFG)
     planless = ops.index_weight_segment_reduce(h, gidx, w, jnp.asarray(idx),
-                                               s, impl, CFG)
+                                               s, "sum", impl, CFG)
     planned = ops.index_weight_segment_reduce(h, gidx, w, jnp.asarray(idx),
-                                              s, impl, None, plan)
+                                              s, "sum", impl, None, plan)
     np.testing.assert_allclose(np.asarray(planned), np.asarray(planless),
                                rtol=3e-4, atol=3e-4)
 
@@ -165,7 +167,7 @@ def test_grad_through_plan(impl):
 
     def f(h, w, plan_, impl_):
         y = ops.index_weight_segment_reduce(h, gidx, w, jnp.asarray(idx), s,
-                                            impl_, None, plan_)
+                                            "sum", impl_, None, plan_)
         return jnp.sum(y ** 2)
 
     dh, dw = jax.grad(f, argnums=(0, 1))(h, w, plan, impl)
@@ -195,7 +197,7 @@ def test_segment_reduce_grad_with_plan_inside_jit():
 # end-to-end GNN: pallas + plan matches ref, forward and backward
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("model", ["gcn", "gin", "sage"])
+@pytest.mark.parametrize("model", ["gcn", "gin", "sage", "gat"])
 def test_gnn_pallas_plan_matches_ref(model):
     g = synth_graph("t", 60, 300, feat=8, seed=3)
     plan = g.make_plan(feat=16, config=CFG)
@@ -241,7 +243,7 @@ def test_batch_graphs_structure():
         assert (blk >= b.node_ptr[i]).all() and (blk < b.node_ptr[i + 1]).all()
 
 
-@pytest.mark.parametrize("model", ["gcn", "gin", "sage"])
+@pytest.mark.parametrize("model", ["gcn", "gin", "sage", "gat"])
 def test_batched_forward_matches_per_graph(model):
     gs = [synth_graph(f"g{i}", 25 + 5 * i, 90 + 30 * i, feat=8, seed=10 + i)
           for i in range(3)]
@@ -290,6 +292,27 @@ def test_batched_backward_matches_per_graph():
                      jax.tree_util.tree_leaves(g_batched)):
         np.testing.assert_allclose(np.asarray(b_), np.asarray(a),
                                    rtol=1e-4, atol=1e-4)
+
+
+def test_unbatch_edges_round_trip():
+    """batch_graphs → unbatch_edges recovers every member's edges (after
+    removing the node-id offsets), mirroring unbatch_nodes."""
+    from repro.data.graphs import unbatch_edges
+    gs = [synth_graph(f"g{i}", 20 + 7 * i, 60 + 25 * i, feat=4, seed=40 + i)
+          for i in range(3)]
+    b = batch_graphs(gs)
+    parts = unbatch_edges(b, b.edge_index.T)        # (E_total, 2) per-edge
+    assert len(parts) == len(gs)
+    for i, (g, part) in enumerate(zip(gs, parts)):
+        np.testing.assert_array_equal(
+            part.T - b.node_ptr[i], g.edge_index)
+    # per-edge payloads split on the same boundaries
+    w = np.arange(b.num_edges, dtype=np.float32)
+    for i, part in enumerate(unbatch_edges(b, w)):
+        np.testing.assert_array_equal(
+            part, w[b.edge_ptr[i]:b.edge_ptr[i + 1]])
+    # single (unbatched) graph: identity
+    assert unbatch_edges(gs[0], w)[0] is w
 
 
 def test_graph_plan_batched_has_tight_grid():
