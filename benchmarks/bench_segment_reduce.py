@@ -195,6 +195,26 @@ def run_smoke():
          f"{str(times[picked] < times[other]).lower()}|"
          f"speedup={times[other] / times[picked]:.2f}x")
 
+    # -- sharded message passing: 1 vs 4 host shards ----------------------
+    # (needs >= 4 devices: main() forces the host device count before jax
+    # initializes; locally run with XLA_FLAGS=--xla_force_host_platform_
+    # device_count=8 to reproduce the committed rows)
+    if len(jax.devices()) >= 4:
+        from repro.core.dist_mp import make_shard_mesh, mp_sharded
+        for shards in (1, 4):
+            pg = g.partition(shards)
+            pplan = pg.make_plan(feat=f, config=cfg)
+            mesh = make_shard_mesh(shards)
+            fn = jax.jit(lambda h, pg=pg, pplan=pplan, mesh=mesh: mp_sharded(
+                h, pg, reduce="sum", pplan=pplan, mesh=mesh, impl="pallas"))
+            t = timeit(fn, h, reps=3, warmup=1)
+            emit(f"smoke/mp_sharded/shards{shards}", t,
+                 f"cut={pg.halo.total_cut}"
+                 f"|grid={pplan.max_chunks}|psum_merge")
+    else:
+        emit("smoke/mp_sharded/skipped", 0.0,
+             f"devices={len(jax.devices())}<4")
+
 
 def run_ablation(smoke: bool = True, perfdb_path=None):
     """Fig. 8 — selector ablation on the real (interpreted on CPU) kernel:
@@ -257,6 +277,18 @@ def run_ablation(smoke: bool = True, perfdb_path=None):
 
 
 def main():
+    # pin the host device count ahead of backend initialization so the
+    # smoke run can time the 4-shard mp_sharded path (no-op when the flag
+    # is already set or jax devices were already touched). Smoke mode only:
+    # the fig8 ablation's autotuner sweeps feed the persistent PerfDB,
+    # which must be measured under the normal single-device environment.
+    import os
+    import sys
+    if "--smoke" in sys.argv and \
+            "xla_force_host_platform_device_count" not in \
+            os.environ.get("XLA_FLAGS", ""):
+        os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                                   " --xla_force_host_platform_device_count=8")
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="tiny CI run; implies --json BENCH_segment_reduce.json")
@@ -264,6 +296,10 @@ def main():
     ap.add_argument("--ablation", action="store_true",
                     help="add the Fig. 8 selector ablation "
                          "(tuned / generated-rules / hand-crafted)")
+    ap.add_argument("--ablation-smoke", action="store_true",
+                    help="CI-sized ablation sweep *without* --smoke — keeps "
+                         "the process single-device so the autotuner's "
+                         "PerfDB measurements stay environment-consistent")
     ap.add_argument("--perfdb", default=None,
                     help="PerfDB path for --ablation (default: "
                          "REPRO_PERFDB_PATH or ~/.cache/repro-perfdb)")
@@ -273,11 +309,13 @@ def main():
     print("name,us_per_call,derived")
     if args.smoke:
         run_smoke()
-    else:
+    elif not (args.ablation and args.ablation_smoke):
         run(quick=args.quick)
     if args.ablation:
-        run_ablation(smoke=args.smoke, perfdb_path=args.perfdb)
+        run_ablation(smoke=args.smoke or args.ablation_smoke,
+                     perfdb_path=args.perfdb)
     json_path = args.json or ("BENCH_segment_reduce.json" if args.smoke
+                              else "BENCH_ablation.json" if args.ablation
                               else None)
     if json_path:
         write_json(json_path, bench="segment_reduce",

@@ -24,8 +24,11 @@ import os
 import sys
 
 REFRESH_HINT = (
-    "PYTHONPATH=src python -m benchmarks.bench_segment_reduce --smoke --ablation "
-    "&& cp BENCH_segment_reduce.json benchmarks/baseline/"
+    "PYTHONPATH=src python -m benchmarks.bench_segment_reduce --smoke "
+    "&& cp BENCH_segment_reduce.json benchmarks/baseline/ "
+    "&& PYTHONPATH=src python -m benchmarks.bench_segment_reduce "
+    "--ablation --ablation-smoke --json BENCH_ablation.json "
+    "&& cp BENCH_ablation.json benchmarks/baseline/"
 )
 
 

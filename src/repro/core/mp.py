@@ -37,9 +37,32 @@ import jax.numpy as jnp
 from repro.core import ops as geot
 from repro.core.config_space import KernelConfig
 
-__all__ = ["mp", "mp_transform", "choose_order"]
+__all__ = ["mp", "mp_transform", "choose_order", "resolve_order"]
 
 _LINEAR_REDUCES = ("sum", "mean")
+
+
+def resolve_order(reduce: str, order: str, d_in: int, d_out: int, *,
+                  plan=None, num_edges=None, num_nodes=None,
+                  config=None) -> str:
+    """Validate and resolve the transform/aggregate order for one layer —
+    the single source of truth shared by :func:`mp_transform` and the
+    sharded :func:`repro.core.dist_mp.mp_transform_sharded`.
+
+    Non-linear reduces do not commute with ``W`` and pin transform-first;
+    ``"auto"`` asks the cost model (:func:`choose_order`)."""
+    if order not in ("auto", "aggregate_first", "transform_first"):
+        raise ValueError(f"unknown order: {order!r}")
+    if reduce not in _LINEAR_REDUCES:
+        if order == "aggregate_first":
+            raise ValueError(
+                f"reduce={reduce!r} does not commute with the transform; "
+                "aggregate_first would compute a different function")
+        return "transform_first"
+    if order == "auto":
+        return choose_order(d_in, d_out, plan=plan, num_edges=num_edges,
+                            num_nodes=num_nodes, config=config)
+    return order
 
 
 def mp(x, edge_index, num_nodes: int, *, reduce: str = "sum",
@@ -109,19 +132,10 @@ def mp_transform(x, w, edge_index, num_nodes: int, *, reduce: str = "sum",
     ``order`` ∈ {"auto", "aggregate_first", "transform_first"} — pin it for
     ablation benchmarks. Non-linear reduces (``max``) do not commute with
     ``W`` and always run transform-first."""
-    if order not in ("auto", "aggregate_first", "transform_first"):
-        raise ValueError(f"unknown order: {order!r}")
-    d_in, d_out = int(x.shape[-1]), int(w.shape[-1])
-    if reduce not in _LINEAR_REDUCES:
-        if order == "aggregate_first":
-            raise ValueError(
-                f"reduce={reduce!r} does not commute with the transform; "
-                "aggregate_first would compute a different function")
-        order = "transform_first"
-    elif order == "auto":
-        order = choose_order(d_in, d_out, plan=plan,
-                             num_edges=int(edge_index.shape[-1]),
-                             num_nodes=num_nodes, config=config)
+    order = resolve_order(reduce, order, int(x.shape[-1]),
+                          int(w.shape[-1]), plan=plan,
+                          num_edges=int(edge_index.shape[-1]),
+                          num_nodes=num_nodes, config=config)
     if order == "aggregate_first":
         agg = mp(x, edge_index, num_nodes, reduce=reduce,
                  edge_weight=edge_weight, plan=plan, impl=impl, config=config)

@@ -149,11 +149,24 @@ def _segment_reduce_blocked(x, idx, num_segments: int, reduce: str,
 # Public ops with custom VJPs
 # ---------------------------------------------------------------------------
 
+def _account_unfused(op: str) -> None:
+    # trace-time fusion accounting (see repro.kernels.ops): any aggregation
+    # that runs as jnp segment ops instead of a fused kernel launch
+    from repro.kernels import ops as kops
+    kops.account("unfused", op)
+
+
 def _dispatch_segment_reduce(x, idx, num_segments, reduce, impl, config,
-                             plan=None):
+                             plan=None, account=True):
+    # ``account=False``: the public index_* ops already recorded this
+    # aggregation — don't double-count the inner dispatch
     if impl == "ref":
+        if account:
+            _account_unfused(f"segment_reduce_{reduce}:ref")
         return _segment_reduce_ref(x, idx, num_segments, reduce)
     if impl == "blocked":
+        if account:
+            _account_unfused(f"segment_reduce_{reduce}:blocked")
         cfg = (config or (plan.config if plan is not None else None)
                or _auto_config(idx, num_segments, x.shape[-1]))
         return _segment_reduce_blocked(x, idx, num_segments, reduce, cfg)
@@ -197,6 +210,17 @@ def _segment_reduce_fwd(x, idx, num_segments, reduce, impl, config, plan=None):
     return y, res
 
 
+def _take0(a, idx):
+    """Gather rows of ``a`` by a segment index, dropping out-of-range ids.
+
+    Rows with ``idx >= num_segments`` (the padding convention of
+    :mod:`repro.data.partition` and of the kernels' own row padding) are
+    dropped by every forward scatter; the backward gathers must mirror
+    that — ``jnp.take``'s default out-of-bounds mode fills NaN, which
+    would leak into real rows through the scatter-add."""
+    return jnp.take(a, idx, axis=0, mode="fill", fill_value=0)
+
+
 def _split_ties(y_bar, winner, idx, num_segments):
     """Max backward: divide each output's cotangent by its winner count so
     tied rows (duplicate edges / equal messages) share — not multiply —
@@ -209,14 +233,14 @@ def _split_ties(y_bar, winner, idx, num_segments):
 def _segment_reduce_bwd(num_segments, reduce, impl, config, res, y_bar):
     if reduce == "sum":
         (idx,) = res
-        return (jnp.take(y_bar, idx, axis=0), None, None)
+        return (_take0(y_bar, idx), None, None)
     if reduce == "mean":
         idx, cnt = res
         scale = 1.0 / jnp.maximum(cnt, 1.0)
-        return (jnp.take(y_bar * scale[:, None], idx, axis=0), None, None)
+        return (_take0(y_bar * scale[:, None], idx), None, None)
     idx, x, y = res
-    winner = (x == jnp.take(y, idx, axis=0)).astype(y_bar.dtype)
-    g = jnp.take(_split_ties(y_bar, winner, idx, num_segments), idx, axis=0)
+    winner = (x == _take0(y, idx)).astype(y_bar.dtype)
+    g = _take0(_split_ties(y_bar, winner, idx, num_segments), idx)
     return (winner * g, None, None)
 
 
@@ -269,10 +293,11 @@ def index_segment_reduce(h, gather_idx, seg_idx, num_segments: int,
         return kops.gather_segment_reduce(h, gather_idx, seg_idx,
                                           num_segments, reduce=reduce,
                                           config=config, plan=plan)
+    _account_unfused(f"index_segment_reduce_{reduce}:{impl}")
     msg = jnp.take(h, gather_idx, axis=0)
     return _dispatch_segment_reduce(msg, seg_idx, num_segments, reduce,
                                     "ref" if impl == "ref" else impl, config,
-                                    plan)
+                                    plan, account=False)
 
 
 def _isr_fwd(h, gather_idx, seg_idx, num_segments, reduce, impl, config,
@@ -285,16 +310,16 @@ def _isr_fwd(h, gather_idx, seg_idx, num_segments, reduce, impl, config,
 def _isr_bwd(num_segments, reduce, impl, config, res, y_bar):
     h, gather_idx, seg_idx, y = res
     if reduce == "sum":
-        g_edges = jnp.take(y_bar, seg_idx, axis=0)
+        g_edges = _take0(y_bar, seg_idx)
     elif reduce == "mean":
         cnt = jax.ops.segment_sum(jnp.ones_like(seg_idx, dtype=y_bar.dtype),
                                   seg_idx, num_segments, indices_are_sorted=True)
-        g_edges = jnp.take(y_bar / jnp.maximum(cnt, 1.0)[:, None], seg_idx, axis=0)
+        g_edges = _take0(y_bar / jnp.maximum(cnt, 1.0)[:, None], seg_idx)
     else:  # max: winner rows share the cotangent (equal split over ties)
         msg = jnp.take(h, gather_idx, axis=0)
-        winner = (msg == jnp.take(y, seg_idx, axis=0)).astype(y_bar.dtype)
-        g_edges = winner * jnp.take(
-            _split_ties(y_bar, winner, seg_idx, num_segments), seg_idx, axis=0)
+        winner = (msg == _take0(y, seg_idx)).astype(y_bar.dtype)
+        g_edges = winner * _take0(
+            _split_ties(y_bar, winner, seg_idx, num_segments), seg_idx)
     dh = jnp.zeros_like(h).at[gather_idx].add(g_edges)
     return (dh, None, None, None)
 
@@ -322,10 +347,11 @@ def index_weight_segment_reduce(h, gather_idx, weight, seg_idx,
         return kops.gather_segment_reduce(h, gather_idx, seg_idx, num_segments,
                                           weight=weight, reduce=reduce,
                                           config=config, plan=plan)
+    _account_unfused(f"index_weight_segment_reduce_{reduce}:{impl}")
     msg = jnp.take(h, gather_idx, axis=0) * weight[:, None].astype(h.dtype)
     return _dispatch_segment_reduce(msg, seg_idx, num_segments, reduce,
                                     "ref" if impl == "ref" else impl, config,
-                                    plan)
+                                    plan, account=False)
 
 
 def _iwsr_fwd(h, gather_idx, weight, seg_idx, num_segments, reduce, impl,
@@ -342,13 +368,12 @@ def _iwsr_bwd(num_segments, reduce, impl, config, res, y_bar):
     h, gather_idx, weight, seg_idx, y = res
     # d(msg) with msg[i] = w[i]·H[g[i]]: per-reduce cotangent routed to edges
     if reduce == "sum":
-        g_msg = jnp.take(y_bar, seg_idx, axis=0)
+        g_msg = _take0(y_bar, seg_idx)
     elif reduce == "mean":
         cnt = jax.ops.segment_sum(jnp.ones_like(seg_idx, dtype=y_bar.dtype),
                                   seg_idx, num_segments,
                                   indices_are_sorted=True)
-        g_msg = jnp.take(y_bar / jnp.maximum(cnt, 1.0)[:, None], seg_idx,
-                         axis=0)
+        g_msg = _take0(y_bar / jnp.maximum(cnt, 1.0)[:, None], seg_idx)
     else:  # max: winner rows share the cotangent (equal split over ties)
         # the winner recompute must mirror the forward's arithmetic exactly,
         # or low-precision runs silently zero the mask: the pallas kernel
@@ -360,9 +385,9 @@ def _iwsr_bwd(num_segments, reduce, impl, config, res, y_bar):
         else:
             msg = (jnp.take(h, gather_idx, axis=0)
                    * weight[:, None].astype(h.dtype))
-        winner = (msg == jnp.take(y, seg_idx, axis=0)).astype(y_bar.dtype)
-        g_msg = winner * jnp.take(
-            _split_ties(y_bar, winner, seg_idx, num_segments), seg_idx, axis=0)
+        winner = (msg == _take0(y, seg_idx)).astype(y_bar.dtype)
+        g_msg = winner * _take0(
+            _split_ties(y_bar, winner, seg_idx, num_segments), seg_idx)
     dh = jnp.zeros_like(h).at[gather_idx].add(
         g_msg * weight[:, None].astype(y_bar.dtype))
     # dW = SDDMM: per-edge dot of gathered rows (paper §VI)
@@ -404,6 +429,7 @@ def segment_softmax(x, idx, num_segments: int, impl: str = "ref",
         from repro.kernels import ops as kops
         return kops.segment_softmax(x, idx, num_segments, config=config,
                                     plan=plan)
+    _account_unfused(f"segment_softmax:{impl}")
     return _segment_softmax_ref(x, idx, num_segments)
 
 
@@ -416,7 +442,7 @@ def _ssm_bwd(num_segments, impl, config, res, g):
     p, idx = res
     # d softmax: p ⊙ (g − Σ_{segment} p·g), the per-segment Jacobian action
     t = jax.ops.segment_sum(p * g, idx, num_segments, indices_are_sorted=True)
-    return (p * (g - jnp.take(t, idx, axis=0)), None, None)
+    return (p * (g - _take0(t, idx)), None, None)
 
 
 segment_softmax.defvjp(_ssm_fwd, _ssm_bwd)

@@ -37,7 +37,8 @@ import numpy as np
 
 from repro.core.config_space import KernelConfig
 
-__all__ = ["SegmentStats", "SegmentPlan", "make_plan", "make_graph_plan"]
+__all__ = ["SegmentStats", "SegmentPlan", "PartitionedPlan", "make_plan",
+           "make_graph_plan", "make_partitioned_plan"]
 
 
 def _round_up(x: int, m: int) -> int:
@@ -176,6 +177,99 @@ def make_plan(idx, num_segments: int, feat: int = 128,
         chunk_count=jnp.asarray(chunk_count),
         num_rows=m,
         num_segments=int(num_segments),
+        max_chunks=max_chunks,
+        config=config,
+        stats=stats,
+    )
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class PartitionedPlan:
+    """Per-shard :class:`SegmentPlan` metadata with **stacked** leaves, so
+    the whole plan rides ``shard_map`` with ``PartitionSpec("shard")``.
+
+    All shards share one static program: a common ``config``, a common
+    padded row count (``num_rows = edges_per_shard``), the *global* segment
+    space (``num_segments = |V|``), and one ``max_chunks`` — the max over
+    every shard's tight bound (shard_map traces a single kernel grid).
+    ``stats`` describe the *global* index, feeding the same cost-model
+    decisions (transform/aggregate reordering) as a single-device plan.
+    """
+    chunk_first: jax.Array   # (num_shards, out_blocks) int32
+    chunk_count: jax.Array   # (num_shards, out_blocks) int32
+    num_shards: int
+    num_rows: int            # E_pad: padded rows per shard
+    num_segments: int        # V: the global output space every shard targets
+    max_chunks: int          # max over shards' tight bounds, >= 1
+    config: KernelConfig
+    stats: SegmentStats      # of the global (unpartitioned) index
+
+    def tree_flatten(self):
+        children = (self.chunk_first, self.chunk_count)
+        aux = (self.num_shards, self.num_rows, self.num_segments,
+               self.max_chunks, self.config, self.stats)
+        return children, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+    def local_plan(self, chunk_first, chunk_count) -> SegmentPlan:
+        """The one-shard :class:`SegmentPlan` seen inside ``shard_map``
+        (``chunk_first``/``chunk_count``: this shard's (1, out_blocks) or
+        (out_blocks,) slices of the stacked leaves)."""
+        if chunk_first.ndim == 2:
+            chunk_first, chunk_count = chunk_first[0], chunk_count[0]
+        return SegmentPlan(chunk_first, chunk_count, self.num_rows,
+                           self.num_segments, self.max_chunks, self.config,
+                           self.stats)
+
+
+def make_partitioned_plan(pg, feat: int = 128,
+                          config: Optional[KernelConfig] = None,
+                          tune: Optional[bool] = None) -> PartitionedPlan:
+    """Build one :class:`PartitionedPlan` for a
+    :class:`~repro.data.partition.PartitionedGraph`.
+
+    The config is selected once from the per-shard workload (each kernel
+    launch reduces ``edges_per_shard`` rows into the global segment space);
+    the chunk metadata is evaluated per shard over its padded local dst
+    index — padding slots carry ``dst = num_nodes`` and drop out of every
+    output window, the same convention :func:`make_plan` uses for row
+    padding."""
+    dst = np.asarray(pg.dst_global)              # (S, E_pad), pad = V
+    valid = np.asarray(pg.edge_valid)
+    v = int(pg.num_nodes)
+    stats = segment_stats(np.sort(dst[valid]).astype(np.int32), v)
+
+    if config is None:
+        from repro.core.heuristics import select_config
+        live_per_shard = max(
+            max((int(np.unique(dst[s][valid[s]]).size)
+                 for s in range(pg.num_shards)), default=0), 1)
+        config = select_config(max(int(pg.edges_per_shard), 1),
+                               live_per_shard, feat, tune=tune)
+
+    s_b, m_b = config.s_b, config.m_b
+    m_pad = _round_up(max(int(pg.edges_per_shard), 1), m_b)
+    from repro.kernels.segment_reduce import chunk_metadata
+    cf_list, cc_list, max_chunks = [], [], 1
+    for s in range(pg.num_shards):
+        idxp = np.full((m_pad,), v, np.int32)
+        idxp[:dst.shape[1]] = dst[s]
+        cf, cc = chunk_metadata(idxp, v, s_b, m_b, m_pad)
+        cc_np = np.asarray(cc)
+        if cc_np.size:
+            max_chunks = max(max_chunks, int(cc_np.max()))
+        cf_list.append(np.asarray(cf))
+        cc_list.append(cc_np)
+    return PartitionedPlan(
+        chunk_first=jnp.asarray(np.stack(cf_list)),
+        chunk_count=jnp.asarray(np.stack(cc_list)),
+        num_shards=int(pg.num_shards),
+        num_rows=int(pg.edges_per_shard),
+        num_segments=v,
         max_chunks=max_chunks,
         config=config,
         stats=stats,

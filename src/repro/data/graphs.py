@@ -27,6 +27,11 @@ class Graph:
     # block-diagonal batch bookkeeping (batch_graphs); None for single graphs
     node_ptr: Optional[np.ndarray] = None    # (G+1,) node offsets per graph
     edge_ptr: Optional[np.ndarray] = None    # (G+1,) edge offsets per graph
+    # per-instance plan memo (see make_plan); excluded from init/eq/repr —
+    # init=False so dataclasses.replace() starts a fresh memo instead of
+    # aliasing the source graph's (replaced edges must not hit stale plans)
+    _plan_cache: dict = dataclasses.field(default_factory=dict, repr=False,
+                                          compare=False, init=False)
 
     @property
     def num_edges(self) -> int:
@@ -40,11 +45,32 @@ class Graph:
                   tune: Optional[bool] = None):
         """Precompute the reduction schedule for this graph (built once,
         reused across layers / steps — see :mod:`repro.core.plan`).
-        ``tune=True`` picks the config from a measured autotuner sweep."""
-        from repro.core.plan import make_graph_plan
+        ``tune=True`` picks the config from a measured autotuner sweep.
+
+        Memoized per ``(feat, config, tune)``: a model calling
+        ``g.make_plan`` every layer (or every training step) pays the chunk
+        metadata + config selection once. The graph is frozen, so the memo
+        only goes stale if the arrays are mutated in place — call
+        :meth:`invalidate_plan_cache` after any such surgery."""
         feat = self.x.shape[1] if feat is None else feat
-        return make_graph_plan(self.edge_index, self.num_nodes, feat=feat,
-                               config=config, tune=tune)
+        key = (int(feat), config, tune)
+        plan = self._plan_cache.get(key)
+        if plan is None:
+            from repro.core.plan import make_graph_plan
+            plan = make_graph_plan(self.edge_index, self.num_nodes, feat=feat,
+                                   config=config, tune=tune)
+            self._plan_cache[key] = plan
+        return plan
+
+    def invalidate_plan_cache(self) -> None:
+        """Drop memoized plans (after in-place edge/feature surgery)."""
+        self._plan_cache.clear()
+
+    def partition(self, num_shards: int):
+        """Split into ``num_shards`` for sharded message passing (see
+        :mod:`repro.data.partition` / :mod:`repro.core.dist_mp`)."""
+        from repro.data.partition import partition_graph
+        return partition_graph(self, num_shards)
 
 
 def synth_graph(name: str, num_nodes: int, num_edges: int, feat: int = 32,
@@ -52,12 +78,20 @@ def synth_graph(name: str, num_nodes: int, num_edges: int, feat: int = 32,
                 seed: int = 0) -> Graph:
     """Power-law in-degree graph with the given |V|, |E|."""
     rng = np.random.default_rng(seed)
-    w = rng.zipf(alpha, size=num_nodes).astype(np.float64)
-    w = np.minimum(w, num_edges / 4.0)
-    p = w / w.sum()
-    dst = rng.choice(num_nodes, size=num_edges, p=p).astype(np.int32)
-    dst.sort(kind="stable")
-    src = rng.integers(0, num_nodes, size=num_edges, dtype=np.int32)
+    if num_edges > 0:
+        w = rng.zipf(alpha, size=num_nodes).astype(np.float64)
+        # cap at E/4 but never below 1 (zipf samples are >= 1): a cap of 0
+        # would zero the whole weight vector and divide by 0 below
+        w = np.minimum(w, max(num_edges / 4.0, 1.0))
+        p = w / w.sum()
+        dst = rng.choice(num_nodes, size=num_edges, p=p).astype(np.int32)
+        dst.sort(kind="stable")
+        src = rng.integers(0, num_nodes, size=num_edges, dtype=np.int32)
+    else:
+        # empty-edge graph (isolated nodes): a valid (2, 0) edge_index —
+        # plans, mp, and the models must all keep working on it
+        dst = np.zeros(0, np.int32)
+        src = np.zeros(0, np.int32)
     deg = np.bincount(dst, minlength=num_nodes).astype(np.float32)
     return Graph(
         name=name,

@@ -15,6 +15,7 @@ wall-clock tuning sweep never runs at trace time.
 """
 from __future__ import annotations
 
+import collections
 import os
 from typing import Optional
 
@@ -31,6 +32,35 @@ def _default_interpret() -> bool:
     if env is not None:
         return env not in ("0", "false", "False")
     return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# fusion accounting — trace-time counters keyed "<kind>:<op>":
+#   fused:    a fused Pallas kernel launch
+#   unfused:  a jnp segment-op fallback replacing a fused aggregation
+#   merge:    cross-shard halo algebra (e.g. the sharded softmax's (m, z)
+#             statistics) — auxiliary segment ops that are part of the
+#             collective merge, not a fallback of the aggregation itself
+# Because the wrappers run at trace time, a jitted graph records each op
+# site once; reset before tracing and read after to audit a path (e.g.
+# assert the sharded message-passing path launches only fused kernels).
+# ---------------------------------------------------------------------------
+
+_FUSION_COUNTS: collections.Counter = collections.Counter()
+
+
+def account(kind: str, op: str) -> None:
+    """Record one ``kind`` ∈ {"fused", "unfused", "merge"} event on ``op``."""
+    _FUSION_COUNTS[f"{kind}:{op}"] += 1
+
+
+def fusion_counts() -> dict:
+    """Snapshot of the accounting counters (trace-time launch counts)."""
+    return dict(_FUSION_COUNTS)
+
+
+def reset_fusion_counts() -> None:
+    _FUSION_COUNTS.clear()
 
 
 def _resolve_config(config: Optional[KernelConfig], plan, idx_size: int,
@@ -53,6 +83,10 @@ def segment_reduce(x, idx, num_segments: int, reduce: str = "sum",
     interpret = _default_interpret() if interpret is None else interpret
     config = _resolve_config(config, plan, x.shape[0], num_segments,
                              x.shape[-1], "segment_reduce")
+    account("fused", f"segment_reduce_{reduce}")
+    if reduce == "mean":
+        # the non-gather mean pairs a fused sum launch with a jnp count
+        account("unfused", "segment_reduce_mean_count")
     return segment_reduce_pallas(x, idx, num_segments, reduce=reduce,
                                  config=config, max_chunks=max_chunks,
                                  interpret=interpret, plan=plan)
@@ -74,6 +108,7 @@ def gather_segment_reduce(h, gather_idx, seg_idx, num_segments: int,
           else f"gather_segment_reduce_{reduce}")
     config = _resolve_config(config, plan, gather_idx.shape[0], num_segments,
                              h.shape[-1], op)
+    account("fused", op if weight is None else f"{op}_weighted")
     return gather_segment_reduce_pallas(h, gather_idx, seg_idx, num_segments,
                                         weight=weight, reduce=reduce,
                                         config=config, max_chunks=max_chunks,
@@ -126,6 +161,7 @@ def segment_softmax(x, idx, num_segments: int,
     feat = int(x.shape[-1]) if x.ndim > 1 else 1
     config = _resolve_config(config, plan, idx.shape[0], num_segments, feat,
                              "segment_softmax")
+    account("fused", "segment_softmax")
     return segment_softmax_pallas(x, idx, num_segments, config=config,
                                   max_chunks=max_chunks, interpret=interpret,
                                   plan=plan)

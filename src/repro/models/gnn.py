@@ -8,7 +8,7 @@ the paper relies on.
 Every layer shares one signature
 
     layer(prm, x, edge_index, num_nodes, deg_inv_sqrt=None, *,
-          impl="ref", plan=None)
+          impl="ref", plan=None, mesh=None, partition=None)
 
 and routes its aggregation through ``mp`` / ``mp_transform``: on the
 ``pallas`` path every reduce (sum / mean / max, weighted or not) and the
@@ -16,6 +16,13 @@ GAT ``segment_softmax`` is a single fused plan-aware kernel, and layers
 whose aggregation commutes with their dense transform (GCN, SAGE's
 neighbour branch) let ``mp_transform`` reorder transform vs aggregate by
 the cost model (aggregate-first when d_in < d_out).
+
+Passing ``partition=`` (a :class:`~repro.data.partition.PartitionedGraph`,
+with ``plan`` a matching :class:`~repro.core.plan.PartitionedPlan` and
+``mesh`` a 1-D device mesh) reroutes every aggregation through
+:mod:`repro.core.dist_mp`: the same fused kernels run per shard and halo
+contributions merge with the reduce's collective algebra — the model code
+itself is unchanged up to that dispatch.
 """
 from __future__ import annotations
 
@@ -28,6 +35,29 @@ from repro.core import ops as geot
 from repro.core.mp import mp as mp_agg
 from repro.core.mp import mp_transform
 from repro.models.params import P, dense_init, zeros_init
+
+
+def _mp(x, edge_index, num_nodes, *, reduce, edge_weight=None, plan=None,
+        impl="ref", mesh=None, partition=None):
+    """Dispatch plain vs sharded message passing (one switch for every
+    layer; ``plan`` is a SegmentPlan or, sharded, a PartitionedPlan)."""
+    if partition is None:
+        return mp_agg(x, edge_index, num_nodes, reduce=reduce,
+                      edge_weight=edge_weight, plan=plan, impl=impl)
+    from repro.core.dist_mp import mp_sharded
+    return mp_sharded(x, partition, reduce=reduce, edge_weight=edge_weight,
+                      pplan=plan, mesh=mesh, impl=impl)
+
+
+def _mp_transform(x, w, edge_index, num_nodes, *, reduce, edge_weight=None,
+                  plan=None, impl="ref", mesh=None, partition=None):
+    if partition is None:
+        return mp_transform(x, w, edge_index, num_nodes, reduce=reduce,
+                            edge_weight=edge_weight, plan=plan, impl=impl)
+    from repro.core.dist_mp import mp_transform_sharded
+    return mp_transform_sharded(x, w, partition, reduce=reduce,
+                                edge_weight=edge_weight, pplan=plan,
+                                mesh=mesh, impl=impl)
 
 
 def make_model_plan(edge_index, num_nodes: int, feat: int,
@@ -54,7 +84,7 @@ def gcn_layer_init(key, d_in: int, d_out: int, dtype=jnp.float32, **_):
 
 
 def gcn_layer(prm, x, edge_index, num_nodes: int, deg_inv_sqrt=None, *,
-              impl: str = "ref", plan=None):
+              impl: str = "ref", plan=None, mesh=None, partition=None):
     """GCN: Y = D^{-1/2} A D^{-1/2} X W — weighted-sum message passing with
     the transform/aggregate order picked by the cost model (paper §IV /
     Fig. 10; aggregate-first when the layer widens)."""
@@ -62,8 +92,9 @@ def gcn_layer(prm, x, edge_index, num_nodes: int, deg_inv_sqrt=None, *,
         raise ValueError("gcn_layer needs deg_inv_sqrt")
     src, dst = edge_index[0], edge_index[1]
     w_e = deg_inv_sqrt[src] * deg_inv_sqrt[dst]
-    out = mp_transform(x, prm["w"].value, edge_index, num_nodes,
-                       reduce="sum", edge_weight=w_e, plan=plan, impl=impl)
+    out = _mp_transform(x, prm["w"].value, edge_index, num_nodes,
+                        reduce="sum", edge_weight=w_e, plan=plan, impl=impl,
+                        mesh=mesh, partition=partition)
     return out + prm["b"].value
 
 
@@ -79,11 +110,11 @@ def gin_layer_init(key, d_in: int, d_out: int, dtype=jnp.float32, **_):
 
 
 def gin_layer(prm, x, edge_index, num_nodes: int, deg_inv_sqrt=None, *,
-              impl: str = "ref", plan=None):
+              impl: str = "ref", plan=None, mesh=None, partition=None):
     """GIN: h' = MLP((1+ε)·h + Σ_neighbors h) — unweighted fused sum.
     The MLP is non-linear, so there is no reordering opportunity."""
-    agg = mp_agg(x, edge_index, num_nodes, reduce="sum", plan=plan,
-                 impl=impl)
+    agg = _mp(x, edge_index, num_nodes, reduce="sum", plan=plan, impl=impl,
+              mesh=mesh, partition=partition)
     h = (1.0 + prm["eps"].value) * x + agg
     h = jax.nn.relu(h @ prm["mlp1"].value + prm["b1"].value)
     return h @ prm["mlp2"].value + prm["b2"].value
@@ -97,12 +128,13 @@ def sage_layer_init(key, d_in: int, d_out: int, dtype=jnp.float32, **_):
 
 
 def sage_layer(prm, x, edge_index, num_nodes: int, deg_inv_sqrt=None, *,
-               impl: str = "ref", plan=None):
+               impl: str = "ref", plan=None, mesh=None, partition=None):
     """GraphSAGE (mean aggregator): one fused mean kernel on the pallas
     path (no sum+count pair), with the neighbour transform reorderable
     (mean commutes with W)."""
-    neigh = mp_transform(x, prm["w_neigh"].value, edge_index, num_nodes,
-                         reduce="mean", plan=plan, impl=impl)
+    neigh = _mp_transform(x, prm["w_neigh"].value, edge_index, num_nodes,
+                          reduce="mean", plan=plan, impl=impl, mesh=mesh,
+                          partition=partition)
     return x @ prm["w_self"].value + neigh + prm["b"].value
 
 
@@ -122,12 +154,16 @@ def gat_layer_init(key, d_in: int, d_out: int, dtype=jnp.float32,
 
 
 def gat_layer(prm, x, edge_index, num_nodes: int, deg_inv_sqrt=None, *,
-              impl: str = "ref", plan=None):
+              impl: str = "ref", plan=None, mesh=None, partition=None):
     """Multi-head GAT: per-head attention via one fused multi-head
     ``segment_softmax`` launch (heads ride the lane dimension), then one
     α-weighted fused sum per head (heads block the feature dim). Head
     outputs are averaged, so the layer's output width is d_out for any
-    ``heads`` — heads=1 reproduces the single-head layer exactly."""
+    ``heads`` — heads=1 reproduces the single-head layer exactly.
+
+    Sharded, the softmax runs per shard with the two-stage stat merge and
+    its stacked per-shard α feeds the weighted sums without ever being
+    gathered back to global edge order."""
     src, dst = edge_index[0], edge_index[1]
     heads, d_out = prm["a_src"].value.shape
     h = x @ prm["w"].value                                  # (V, heads*d_out)
@@ -135,12 +171,17 @@ def gat_layer(prm, x, edge_index, num_nodes: int, deg_inv_sqrt=None, *,
     logit_src = jnp.einsum("vhd,hd->vh", hh, prm["a_src"].value)
     logit_dst = jnp.einsum("vhd,hd->vh", hh, prm["a_dst"].value)
     e = jax.nn.leaky_relu(logit_src[src] + logit_dst[dst], 0.2)  # (E, heads)
-    alpha = geot.segment_softmax(e, dst, num_nodes, impl, None, plan)
+    if partition is None:
+        alpha = geot.segment_softmax(e, dst, num_nodes, impl, None, plan)
+    else:
+        from repro.core.dist_mp import segment_softmax_sharded
+        alpha = segment_softmax_sharded(e, partition, pplan=plan, mesh=mesh,
+                                        impl=impl)      # stacked (S, E_pad, H)
     out = 0.0
     for i in range(heads):
-        out = out + mp_agg(hh[:, i, :], edge_index, num_nodes,
-                           reduce="sum", edge_weight=alpha[:, i],
-                           plan=plan, impl=impl)
+        out = out + _mp(hh[:, i, :], edge_index, num_nodes,
+                        reduce="sum", edge_weight=alpha[..., i],
+                        plan=plan, impl=impl, mesh=mesh, partition=partition)
     return out / heads
 
 
@@ -170,25 +211,35 @@ def init(key, model: str, d_in: int, hidden: int, num_classes: int,
 
 def forward(params, model: str, x, edge_index, num_nodes: int,
             deg_inv_sqrt: Optional[jax.Array] = None, impl: str = "ref",
-            plan=None):
+            plan=None, *, mesh=None, partition=None):
     """``plan``: one :class:`~repro.core.plan.SegmentPlan` built on this
     graph's destinations — reused by every layer (and, via the custom VJPs,
     by the backward pass). One uniform layer call for every family — no
-    per-model special-casing."""
+    per-model special-casing.
+
+    ``partition``/``mesh``: run every aggregation sharded over a device
+    mesh (``plan`` then being the matching
+    :class:`~repro.core.plan.PartitionedPlan`; both are built on demand
+    when omitted). The result stays the replicated global (V, C) logits —
+    sharding is an execution detail, not an API change."""
+    if partition is not None and plan is None:
+        plan = partition.make_plan(feat=int(x.shape[-1]))
     _, layer_fn = _LAYER[model]
     h = x
     for i, prm in enumerate(params):
         h = layer_fn(prm, h, edge_index, num_nodes, deg_inv_sqrt,
-                     impl=impl, plan=plan)
+                     impl=impl, plan=plan, mesh=mesh, partition=partition)
         if i < len(params) - 1:
             h = jax.nn.relu(h)
     return h
 
 
 def loss_fn(params, model: str, x, edge_index, labels, num_nodes: int,
-            deg_inv_sqrt=None, impl: str = "ref", plan=None):
+            deg_inv_sqrt=None, impl: str = "ref", plan=None, *, mesh=None,
+            partition=None):
     logits = forward(params, model, x, edge_index, num_nodes,
-                     deg_inv_sqrt, impl, plan)
+                     deg_inv_sqrt, impl, plan, mesh=mesh,
+                     partition=partition)
     logz = jax.nn.logsumexp(logits, axis=-1)
     gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
     return jnp.mean(logz - gold)

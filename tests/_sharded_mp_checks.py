@@ -1,0 +1,351 @@
+"""Sharded message-passing checks, run in a subprocess with 8 host devices
+(tests/test_sharded_mp.py drives this; the CI distributed smoke step runs
+it directly)."""
+import os
+
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=8")
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import ops as geot                     # noqa: E402
+from repro.core.dist_mp import (make_shard_mesh, mp_sharded,               # noqa: E402
+                                mp_transform_sharded, segment_softmax_sharded)
+from repro.core.mp import mp                           # noqa: E402
+from repro.data.graphs import synth_graph              # noqa: E402
+from repro.data.partition import partition_graph, unpartition_edges  # noqa: E402
+from repro.kernels import ops as kops                  # noqa: E402
+from repro.models import gnn                           # noqa: E402
+
+REDUCES = ("sum", "mean", "max")
+
+
+def _gapped_graph(v, e, f, seed, stride=5):
+    """Every (stride)th node receives edges — empty segments inside and
+    between shards."""
+    rng = np.random.default_rng(seed)
+    dst = np.sort(rng.choice(np.arange(0, v, stride), e)).astype(np.int32)
+    src = rng.integers(0, v, e).astype(np.int32)
+    from repro.data.graphs import Graph
+    deg = np.bincount(dst, minlength=v).astype(np.float32)
+    return Graph(name="gapped", edge_index=np.stack([src, dst]), num_nodes=v,
+                 x=rng.standard_normal((v, f), dtype=np.float32),
+                 labels=np.zeros(v, np.int32),
+                 deg_inv_sqrt=(1.0 / np.sqrt(np.maximum(deg, 1.0)))
+                 .astype(np.float32))
+
+
+def _cases():
+    yield synth_graph("skewed", 60, 300, feat=8, seed=3, alpha=1.2)
+    yield _gapped_graph(70, 240, 8, seed=4)
+    yield synth_graph("tiny", 9, 17, feat=8, seed=5)
+
+
+def check_mp_sharded_parity():
+    """partition_graph -> mp_sharded == single-device mp for every reduce,
+    weighted and unweighted, on skewed and gapped graphs."""
+    for g in _cases():
+        x = jnp.asarray(g.x)
+        ei = jnp.asarray(g.edge_index)
+        rng = np.random.default_rng(11)
+        w = jnp.asarray(rng.standard_normal(g.num_edges).astype(np.float32))
+        for shards in (2, 4):
+            if shards > g.num_nodes:
+                continue
+            pg = partition_graph(g, shards)
+            pplan = pg.make_plan(feat=8)
+            mesh = make_shard_mesh(shards)
+            for reduce in REDUCES:
+                for ew in (None, w):
+                    want = mp(x, ei, g.num_nodes, reduce=reduce,
+                              edge_weight=ew, impl="ref")
+                    got = mp_sharded(x, pg, reduce=reduce, edge_weight=ew,
+                                     pplan=pplan, mesh=mesh, impl="pallas")
+                    np.testing.assert_allclose(
+                        np.asarray(got), np.asarray(want), rtol=1e-5,
+                        atol=1e-5,
+                        err_msg=f"{g.name} shards={shards} {reduce} "
+                                f"weighted={ew is not None}")
+    print("mp_sharded parity OK")
+
+
+def check_mp_sharded_property():
+    """Property test: random skewed/gapped graphs, all four reduces
+    (sum/mean/max/softmax) — hypothesis when installed (CI), seed sweep
+    otherwise."""
+    def one(v, e, stride, seed, shards, reduce):
+        rng = np.random.default_rng(seed)
+        lanes = np.arange(0, v, stride)
+        dst = np.sort(rng.choice(lanes, e)).astype(np.int32)
+        src = rng.integers(0, v, e).astype(np.int32)
+        x = jnp.asarray(rng.standard_normal((v, 4)).astype(np.float32))
+        from repro.data.graphs import Graph
+        g = Graph(name="prop", edge_index=np.stack([src, dst]), num_nodes=v,
+                  x=np.asarray(x), labels=np.zeros(v, np.int32),
+                  deg_inv_sqrt=np.ones(v, np.float32))
+        pg = partition_graph(g, shards)
+        pplan = pg.make_plan(feat=4)
+        mesh = make_shard_mesh(shards)
+        tag = str((v, e, stride, seed, shards, reduce))
+        if reduce == "softmax":
+            logits = jnp.asarray(rng.standard_normal(e).astype(np.float32)
+                                 * 8.0)
+            got = unpartition_edges(pg, segment_softmax_sharded(
+                logits, pg, pplan=pplan, mesh=mesh, impl="pallas"))
+            want = geot.segment_softmax(logits, jnp.asarray(dst), v, "ref")
+        else:
+            got = mp_sharded(x, pg, reduce=reduce, pplan=pplan, mesh=mesh,
+                             impl="pallas")
+            want = mp(x, jnp.asarray(g.edge_index), v, reduce=reduce,
+                      impl="ref")
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5, err_msg=tag)
+
+    all_reduces = REDUCES + ("softmax",)
+    try:
+        from hypothesis import given, settings, strategies as st
+
+        @settings(max_examples=20, deadline=None)
+        @given(st.integers(8, 90), st.integers(1, 150), st.integers(1, 7),
+               st.integers(0, 2 ** 16), st.sampled_from([2, 3, 4, 8]),
+               st.sampled_from(all_reduces))
+        def prop(v, e, stride, seed, shards, reduce):
+            one(v, e, stride, seed, min(shards, v), reduce)
+
+        prop()
+        tag = "hypothesis"
+    except ImportError:
+        for seed in range(8):
+            rng = np.random.default_rng(seed + 100)
+            one(int(rng.integers(8, 90)), int(rng.integers(1, 150)),
+                int(rng.integers(1, 7)), seed, int(rng.choice([2, 3, 4])),
+                all_reduces[seed % 4])
+        tag = "seed sweep (hypothesis not installed)"
+    print(f"mp_sharded property OK ({tag})")
+
+
+def check_mp_sharded_grads():
+    g = synth_graph("g", 60, 300, feat=8, seed=3)
+    x = jnp.asarray(g.x)
+    ei = jnp.asarray(g.edge_index)
+    w = jnp.asarray(
+        np.random.default_rng(0).standard_normal(g.num_edges)
+        .astype(np.float32))
+    pg = partition_graph(g, 4)
+    pplan = pg.make_plan(feat=8)
+    mesh = make_shard_mesh(4)
+    for reduce in REDUCES:
+        for weighted in (False, True):
+            def loss(x, w, sharded):
+                ew = w if weighted else None
+                if sharded:
+                    y = mp_sharded(x, pg, reduce=reduce, edge_weight=ew,
+                                   pplan=pplan, mesh=mesh, impl="pallas")
+                else:
+                    y = mp(x, ei, g.num_nodes, reduce=reduce, edge_weight=ew,
+                           impl="ref")
+                return jnp.sum(jnp.sin(y))
+
+            gs = jax.grad(loss, (0, 1))(x, w, True)
+            gr = jax.grad(loss, (0, 1))(x, w, False)
+            for a, b in zip(gs, gr):
+                np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                           rtol=1e-4, atol=1e-5,
+                                           err_msg=f"{reduce} {weighted}")
+    # tied maxima spanning shards (constant features): the sharded max
+    # subgradient may split ties differently than the single-device even
+    # split (documented in core/dist_mp.py), but it must stay a *valid*
+    # subgradient — the cotangent mass over each segment is conserved, so
+    # the totals agree exactly
+    ones = jnp.ones_like(x)
+
+    def total(sharded):
+        def loss(x):
+            if sharded:
+                y = mp_sharded(x, pg, reduce="max", pplan=pplan, mesh=mesh,
+                               impl="pallas")
+            else:
+                y = mp(x, ei, g.num_nodes, reduce="max", impl="ref")
+            return jnp.sum(y)
+        return float(jnp.sum(jax.grad(loss)(ones)))
+
+    np.testing.assert_allclose(total(True), total(False), rtol=1e-6)
+    print("mp_sharded grads OK (incl. tie-mass conservation)")
+
+
+def check_segment_softmax_sharded():
+    """Two-stage online-softmax stat merge == single-device softmax,
+    values and grads, 1-D and multi-head, large-magnitude logits."""
+    g = _gapped_graph(60, 250, 4, seed=9, stride=3)
+    ei = jnp.asarray(g.edge_index)
+    pg = partition_graph(g, 4)
+    pplan = pg.make_plan(feat=4)
+    mesh = make_shard_mesh(4)
+    rng = np.random.default_rng(2)
+    for shape, scale in (((g.num_edges,), 1.0), ((g.num_edges, 3), 1e4)):
+        e = jnp.asarray(rng.standard_normal(shape).astype(np.float32) * scale)
+        want = geot.segment_softmax(e, ei[1], g.num_nodes, "ref")
+        got_st = segment_softmax_sharded(e, pg, pplan=pplan, mesh=mesh,
+                                         impl="pallas")
+        got = unpartition_edges(pg, got_st)
+        assert bool(jnp.isfinite(got).all())
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-6)
+
+        def l_sh(e):
+            return jnp.sum(jnp.sin(segment_softmax_sharded(
+                e, pg, pplan=pplan, mesh=mesh, impl="pallas")))
+
+        def l_ref(e):
+            return jnp.sum(jnp.sin(geot.segment_softmax(
+                e, ei[1], g.num_nodes, "ref")))
+
+        np.testing.assert_allclose(np.asarray(jax.grad(l_sh)(e)),
+                                   np.asarray(jax.grad(l_ref)(e)),
+                                   rtol=1e-4, atol=1e-6)
+    print("segment_softmax_sharded OK")
+
+
+def check_mp_transform_sharded():
+    g = synth_graph("g", 50, 260, feat=16, seed=5)
+    x = jnp.asarray(g.x)
+    ei = jnp.asarray(g.edge_index)
+    pg = partition_graph(g, 4)
+    pplan = pg.make_plan(feat=16)
+    mesh = make_shard_mesh(4)
+    wmat = jnp.asarray(
+        np.random.default_rng(1).standard_normal((16, 160))
+        .astype(np.float32) / 4.0)
+    want = mp(x, ei, g.num_nodes, reduce="mean", impl="ref") @ wmat
+    for order in ("auto", "aggregate_first", "transform_first"):
+        got = mp_transform_sharded(x, wmat, pg, reduce="mean", pplan=pplan,
+                                   mesh=mesh, impl="pallas", order=order)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-3, atol=2e-3, err_msg=order)
+    try:
+        mp_transform_sharded(x, wmat, pg, reduce="max",
+                             order="aggregate_first")
+        raise AssertionError("max + aggregate_first must raise")
+    except ValueError:
+        pass
+    print("mp_transform_sharded OK")
+
+
+def check_ring_collective():
+    """The ring_allreduce merge (dead distributed/ code now on the GNN hot
+    path) matches the psum merge."""
+    g = synth_graph("g", 64, 300, feat=8, seed=6)
+    x = jnp.asarray(g.x)
+    pg = partition_graph(g, 4)
+    pplan = pg.make_plan(feat=8)
+    mesh = make_shard_mesh(4)
+    a = mp_sharded(x, pg, reduce="sum", pplan=pplan, mesh=mesh,
+                   impl="pallas", collective="psum")
+    b = mp_sharded(x, pg, reduce="sum", pplan=pplan, mesh=mesh,
+                   impl="pallas", collective="ring")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                               atol=1e-5)
+    print("ring-collective merge OK")
+
+
+def check_models_sharded_parity():
+    """gcn/gin/sage/gat forward + loss grads: 4-shard mesh == single device
+    (the acceptance bar: 1e-5 on fp32 synth graphs)."""
+    g = synth_graph("g", 50, 260, feat=8, seed=7)
+    x = jnp.asarray(g.x)
+    ei = jnp.asarray(g.edge_index)
+    dis = jnp.asarray(g.deg_inv_sqrt)
+    labels = jnp.asarray((np.asarray(g.x[:, 0]) > 0).astype(np.int32))
+    plan = g.make_plan(feat=16)
+    pg = partition_graph(g, 4)
+    pplan = pg.make_plan(feat=16)
+    mesh = make_shard_mesh(4)
+    for model in gnn.MODELS:
+        heads = 3 if model == "gat" else 1
+        prm = gnn.init(jax.random.PRNGKey(0), model, 8, 16, 2, heads=heads)
+        want = gnn.forward(prm, model, x, ei, g.num_nodes, dis,
+                           impl="pallas", plan=plan)
+        got = gnn.forward(prm, model, x, ei, g.num_nodes, dis, impl="pallas",
+                          plan=pplan, mesh=mesh, partition=pg)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5, err_msg=model)
+
+        g_ref = jax.grad(gnn.loss_fn)(prm, model, x, ei, labels, g.num_nodes,
+                                      dis, "pallas", plan)
+        g_sh = jax.grad(lambda p: gnn.loss_fn(
+            p, model, x, ei, labels, g.num_nodes, dis, "pallas", pplan,
+            mesh=mesh, partition=pg))(prm)
+        for a, b in zip(jax.tree_util.tree_leaves(g_sh),
+                        jax.tree_util.tree_leaves(g_ref)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-4, atol=1e-5, err_msg=model)
+    print("sharded model parity OK (fwd + grads, all four families)")
+
+
+def check_fusion_accounting():
+    """The sharded planned path launches only fused kernels — zero unfused
+    segment-op fallbacks (trace-time accounting hooks)."""
+    g = synth_graph("g", 50, 260, feat=8, seed=7)
+    x = jnp.asarray(g.x)
+    ei = jnp.asarray(g.edge_index)
+    dis = jnp.asarray(g.deg_inv_sqrt)
+    pg = partition_graph(g, 4)
+    pplan = pg.make_plan(feat=16)
+    mesh = make_shard_mesh(4)
+    for model in gnn.MODELS:
+        heads = 2 if model == "gat" else 1
+        prm = gnn.init(jax.random.PRNGKey(0), model, 8, 16, 2, heads=heads)
+        kops.reset_fusion_counts()
+        jax.make_jaxpr(lambda x: gnn.forward(
+            prm, model, x, ei, g.num_nodes, dis, impl="pallas", plan=pplan,
+            mesh=mesh, partition=pg))(x)
+        counts = kops.fusion_counts()
+        fused = {k: v for k, v in counts.items() if k.startswith("fused:")}
+        unfused = {k: v for k, v in counts.items()
+                   if k.startswith("unfused:")}
+        merge = {k: v for k, v in counts.items() if k.startswith("merge:")}
+        assert fused and not unfused, (model, counts)
+        if model == "gat":
+            # the softmax stat merge must be *visible* in the accounting
+            # (recorded as merge:, not silently un-instrumented)
+            assert merge.get("merge:segment_softmax_stats"), (model, counts)
+    kops.reset_fusion_counts()
+    print("fusion accounting OK (sharded path: fused launches only; "
+          "stat merges visible)")
+
+
+def check_single_shard_degenerate():
+    """num_shards=1 is the identity partition: no padding, no cut edges,
+    and mp_sharded reduces to the plain planned path."""
+    g = synth_graph("g", 40, 200, feat=8, seed=8)
+    pg = partition_graph(g, 1)
+    assert pg.halo.total_cut == 0 and pg.edges_per_shard == g.num_edges
+    x = jnp.asarray(g.x)
+    got = mp_sharded(x, pg, reduce="sum", pplan=pg.make_plan(feat=8),
+                     mesh=make_shard_mesh(1), impl="pallas")
+    want = mp(x, jnp.asarray(g.edge_index), g.num_nodes, reduce="sum",
+              impl="ref")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5,
+                               atol=1e-5)
+    print("single-shard degenerate OK")
+
+
+if __name__ == "__main__":
+    assert len(jax.devices()) >= 8, jax.devices()
+    check_mp_sharded_parity()
+    check_mp_sharded_property()
+    check_mp_sharded_grads()
+    check_segment_softmax_sharded()
+    check_mp_transform_sharded()
+    check_ring_collective()
+    check_models_sharded_parity()
+    check_fusion_accounting()
+    check_single_shard_degenerate()
+    print("ALL SHARDED MP CHECKS OK")

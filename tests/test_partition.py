@@ -1,0 +1,221 @@
+"""Partitioned-graph subsystem: partition invariants, exact round-trips,
+halo metadata, the PartitionedPlan's static consistency, the Graph plan
+memo, and the empty-edge regression (all pure-host — the sharded execution
+parity lives in tests/_sharded_mp_checks.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.plan import make_partitioned_plan
+from repro.data.graphs import synth_graph
+from repro.data.partition import (partition_graph, unpartition_edges,
+                                  unpartition_nodes)
+
+
+def _graphs():
+    return [synth_graph("skew", 60, 300, feat=8, seed=0, alpha=1.2),
+            synth_graph("small", 9, 20, feat=4, seed=1),
+            synth_graph("empty", 12, 0, feat=4, seed=2)]
+
+
+@pytest.mark.parametrize("shards", [1, 2, 4])
+def test_partition_invariants(shards):
+    for g in _graphs():
+        pg = partition_graph(g, shards)
+        node_ptr = np.asarray(pg.node_ptr)
+        # contiguous partition of the node space
+        assert node_ptr[0] == 0 and node_ptr[-1] == g.num_nodes
+        assert np.all(np.diff(node_ptr) >= 0)
+        valid = np.asarray(pg.edge_valid)
+        assert int(valid.sum()) == g.num_edges
+        dst = np.asarray(pg.dst_global)
+        src_local = np.asarray(pg.src_local)
+        for s in range(shards):
+            d = dst[s][valid[s]]
+            # per-shard edge lists stay dst-sorted (kernel precondition)
+            assert np.all(d[1:] >= d[:-1])
+            # remapped sources stay inside the shard's node block
+            vs = node_ptr[s + 1] - node_ptr[s]
+            assert np.all(src_local[s][valid[s]] < vs)
+            assert np.all(src_local[s][valid[s]] >= 0)
+            # padding uses the kernels' drop id
+            assert np.all(dst[s][~valid[s]] == g.num_nodes)
+        # every edge appears exactly once across shards
+        slots = np.asarray(pg.edge_gather)[valid]
+        assert sorted(slots.tolist()) == list(range(g.num_edges))
+
+
+def test_partition_halo_metadata():
+    g = synth_graph("skew", 80, 400, feat=4, seed=3)
+    pg = partition_graph(g, 4)
+    node_ptr = np.asarray(pg.node_ptr)
+    src = np.asarray(g.edge_index[0])
+    dst = np.asarray(g.edge_index[1])
+    shard_of = np.searchsorted(node_ptr, src, side="right") - 1
+    want_cut = [int(np.sum((shard_of == s) &
+                           ((dst < node_ptr[s]) | (dst >= node_ptr[s + 1]))))
+                for s in range(4)]
+    assert list(pg.halo.cut_edges) == want_cut
+    assert pg.halo.total_cut == sum(want_cut)
+    assert 0.0 <= pg.halo.cut_fraction <= 1.0
+    # 1-shard partition has no halo by construction
+    assert partition_graph(g, 1).halo.total_cut == 0
+
+
+def test_partition_roundtrip_nodes_and_edges():
+    rng = np.random.default_rng(7)
+    for g in _graphs():
+        for shards in (1, 3, 4):
+            if shards > g.num_nodes:
+                continue
+            pg = partition_graph(g, shards)
+            x = jnp.asarray(rng.standard_normal((g.num_nodes, 5))
+                            .astype(np.float32))
+            np.testing.assert_array_equal(
+                np.asarray(unpartition_nodes(pg, pg.shard_nodes(x))),
+                np.asarray(x))
+            ev = jnp.asarray(rng.standard_normal((g.num_edges, 3))
+                             .astype(np.float32))
+            np.testing.assert_array_equal(
+                np.asarray(unpartition_edges(pg, pg.shard_edges(ev))),
+                np.asarray(ev))
+
+
+def test_partition_roundtrip_property():
+    """Hypothesis property: unpartition ∘ shard == identity on random
+    skewed/gapped graphs for any shard count."""
+    pytest.importorskip(
+        "hypothesis",
+        reason="hypothesis not installed — property test skipped")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(1, 60), st.integers(0, 200), st.integers(1, 8),
+           st.integers(0, 2 ** 16), st.integers(1, 6))
+    def prop(v, e, stride, seed, shards):
+        rng = np.random.default_rng(seed)
+        lanes = np.arange(0, v, min(stride, v))
+        dst = (np.sort(rng.choice(lanes, e)).astype(np.int32) if e
+               else np.zeros(0, np.int32))
+        src = rng.integers(0, v, e).astype(np.int32)
+        from repro.data.graphs import Graph
+        g = Graph(name="p", edge_index=np.stack([src, dst]), num_nodes=v,
+                  x=rng.standard_normal((v, 2)).astype(np.float32),
+                  labels=np.zeros(v, np.int32),
+                  deg_inv_sqrt=np.ones(v, np.float32))
+        pg = partition_graph(g, min(shards, v))
+        x = jnp.asarray(g.x)
+        np.testing.assert_array_equal(
+            np.asarray(unpartition_nodes(pg, pg.shard_nodes(x))), g.x)
+        ev = jnp.asarray(rng.standard_normal((e,)).astype(np.float32))
+        np.testing.assert_array_equal(
+            np.asarray(unpartition_edges(pg, pg.shard_edges(ev))),
+            np.asarray(ev))
+
+    prop()
+
+
+def test_partition_rejects_bad_shard_counts():
+    g = synth_graph("g", 10, 40, feat=4, seed=0)
+    with pytest.raises(ValueError):
+        partition_graph(g, 0)
+    with pytest.raises(ValueError):
+        partition_graph(g, 11)
+
+
+def test_partition_rejects_unsorted_destinations():
+    """The single-device make_plan raises on unsorted idx; the sharded
+    entry point must fail just as loudly (silent mis-aggregation bug)."""
+    import dataclasses
+    g = synth_graph("g", 10, 40, feat=4, seed=0)
+    ei = g.edge_index[:, ::-1].copy()
+    bad = dataclasses.replace(g, edge_index=ei)
+    with pytest.raises(ValueError, match="sorted"):
+        partition_graph(bad, 2)
+
+
+def test_partitioned_plan_build_rejected_inside_jit():
+    """Plan building is host-side (numpy over leaves); inside jit the
+    leaves are tracers and the guard must raise a clear error instead of
+    a TracerArrayConversionError from deep inside chunk_metadata."""
+    g = synth_graph("g", 12, 30, feat=4, seed=0)
+    pg = partition_graph(g, 2)
+
+    @jax.jit
+    def build(pg):
+        return pg.make_plan(feat=4).chunk_first
+
+    with pytest.raises(ValueError, match="outside jit"):
+        build(pg)
+
+
+def test_partitioned_plan_static_consistency():
+    """Stacked leaves, one shared static program: common row count, global
+    segment space, tight-but-uniform max_chunks, local_plan round-trip."""
+    g = synth_graph("skew", 60, 300, feat=8, seed=0, alpha=1.2)
+    pg = partition_graph(g, 4)
+    pplan = make_partitioned_plan(pg, feat=8)
+    assert pplan.chunk_first.shape == pplan.chunk_count.shape
+    assert pplan.chunk_first.shape[0] == 4
+    assert pplan.num_rows == pg.edges_per_shard
+    assert pplan.num_segments == g.num_nodes
+    assert pplan.max_chunks >= 1
+    cc = np.asarray(pplan.chunk_count)
+    assert int(cc.max()) <= pplan.max_chunks
+    lp = pplan.local_plan(pplan.chunk_first[:1], pplan.chunk_count[:1])
+    assert lp.num_rows == pplan.num_rows
+    assert lp.max_chunks == pplan.max_chunks
+    assert lp.config == pplan.config
+    # global stats drive the cost model exactly like a single-device plan
+    assert pplan.stats.num_rows == g.num_edges
+    # pytree round-trip (rides jit/shard_map closures)
+    leaves, treedef = jax.tree_util.tree_flatten(pplan)
+    assert jax.tree_util.tree_unflatten(treedef, leaves) == pplan
+
+
+def test_graph_make_plan_memoizes():
+    """Repeated Graph.make_plan calls hit the per-(feat, config) memo;
+    invalidation rebuilds."""
+    g = synth_graph("g", 40, 200, feat=8, seed=0)
+    p1 = g.make_plan(feat=16)
+    p2 = g.make_plan(feat=16)
+    assert p1 is p2                       # cache hit, no recompute
+    p3 = g.make_plan(feat=32)
+    assert p3 is not p1                   # different key
+    assert g.make_plan(feat=32) is p3
+    g.invalidate_plan_cache()
+    assert g.make_plan(feat=16) is not p1
+
+
+def test_empty_edge_graph_regression():
+    """num_edges == 0: synth_graph, plans, partitions, mp, and every model
+    must produce finite results (the NaN-probabilities bug)."""
+    from repro.core.mp import mp, mp_transform
+    from repro.models import gnn
+
+    g = synth_graph("empty", 10, 0, feat=8, seed=0)
+    assert g.num_edges == 0
+    plan = g.make_plan(feat=8)
+    assert plan.max_chunks == 1 and plan.stats.skew == 0.0
+    x = jnp.asarray(g.x)
+    ei = jnp.asarray(g.edge_index)
+    dis = jnp.asarray(g.deg_inv_sqrt)
+    for impl, p in (("ref", None), ("pallas", plan)):
+        for reduce in ("sum", "mean", "max"):
+            y = mp(x, ei, g.num_nodes, reduce=reduce, impl=impl, plan=p)
+            assert bool(jnp.isfinite(y).all()), (impl, reduce)
+    w = jnp.asarray(np.ones((8, 16), np.float32))
+    y = mp_transform(x, w, ei, g.num_nodes, reduce="sum", impl="pallas",
+                     plan=plan)
+    assert bool(jnp.isfinite(y).all())
+    for model in gnn.MODELS:
+        prm = gnn.init(jax.random.PRNGKey(0), model, 8, 16, 4)
+        out = gnn.forward(prm, model, x, ei, g.num_nodes, dis,
+                          impl="pallas", plan=plan)
+        assert out.shape == (10, 4) and bool(jnp.isfinite(out).all()), model
+    # partitioning an empty-edge graph also round-trips
+    pg = partition_graph(g, 2)
+    assert pg.edges_per_shard == 0 and pg.halo.total_cut == 0
+    np.testing.assert_array_equal(
+        np.asarray(unpartition_nodes(pg, pg.shard_nodes(x))), np.asarray(x))

@@ -1,0 +1,18 @@
+"""Sharded message-passing integration: runs tests/_sharded_mp_checks.py in
+a subprocess with 8 host devices (the main pytest process keeps 1 device,
+matching conftest's invariant)."""
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.timeout(900)
+def test_sharded_mp_checks_subprocess():
+    script = pathlib.Path(__file__).parent / "_sharded_mp_checks.py"
+    out = subprocess.run([sys.executable, str(script)], capture_output=True,
+                         text=True, timeout=880,
+                         cwd=pathlib.Path(__file__).parents[1])
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    assert "ALL SHARDED MP CHECKS OK" in out.stdout
