@@ -1,7 +1,12 @@
-"""Continuous-batching serving: requests with different prompt lengths and
-budgets stream through a fixed-size decode batch; slots are reused the tick
-after a request finishes (vLLM-style iteration-level scheduling on top of
-the ragged decode_step).
+"""Continuous-batching serving (LM): requests with different prompt lengths
+and budgets stream through a fixed-size decode batch; slots are reused the
+tick after a request finishes (vLLM-style iteration-level scheduling on top
+of the ragged decode_step).
+
+The GNN twin of this demo is ``examples/gnn_serving.py``: variable-shape
+*graphs* streaming through ``repro.serve.GNNServer`` — shape-bucketed
+padding + a per-bucket plan/executable cache + block-diagonal micro-
+batching replace the LM's fixed decode slots (see ``docs/serving.md``).
 
     PYTHONPATH=src python examples/continuous_batching.py
 """

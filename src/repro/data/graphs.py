@@ -27,6 +27,11 @@ class Graph:
     # block-diagonal batch bookkeeping (batch_graphs); None for single graphs
     node_ptr: Optional[np.ndarray] = None    # (G+1,) node offsets per graph
     edge_ptr: Optional[np.ndarray] = None    # (G+1,) edge offsets per graph
+    # pad_graph bookkeeping: the real (pre-padding) sizes, or None when the
+    # graph has never been padded. Padded nodes are isolated (no incident
+    # real edges); padded edges carry dst = num_nodes — the kernels' drop id
+    orig_num_nodes: Optional[int] = None
+    orig_num_edges: Optional[int] = None
     # per-instance plan memo (see make_plan); excluded from init/eq/repr —
     # init=False so dataclasses.replace() starts a fresh memo instead of
     # aliasing the source graph's (replaced edges must not hit stale plans)
@@ -103,6 +108,80 @@ def synth_graph(name: str, num_nodes: int, num_edges: int, feat: int = 32,
     )
 
 
+def pad_graph(g: Graph, num_nodes: int, num_edges: int) -> Graph:
+    """Pad ``g`` to exactly (``num_nodes``, ``num_edges``) without changing
+    what any real node computes.
+
+    Padded nodes are isolated (zero features, label 0, ``deg_inv_sqrt`` = 1
+    — the zero-degree convention of :func:`synth_graph`); padded edges carry
+    ``dst = num_nodes``, the drop id every kernel (and the jnp reference
+    scatters) already uses for its own row padding, so they fall outside
+    every output window and the aggregation over real nodes is bit-identical
+    to the unpadded graph under the same kernel config. Because real
+    destinations are < ``g.num_nodes`` <= ``num_nodes``, appending drop
+    edges keeps ``edge_index[1]`` sorted.
+
+    The real sizes are recorded in ``orig_num_nodes`` / ``orig_num_edges``
+    (carried through repeated padding) for the round-trip helpers
+    :func:`unpad_nodes` / :func:`unpad_edges` / :func:`unpad_graph`; batch
+    pointers survive padding, so a padded batch still unbatches.
+    """
+    v0 = g.orig_num_nodes if g.orig_num_nodes is not None else g.num_nodes
+    e0 = g.orig_num_edges if g.orig_num_edges is not None else g.num_edges
+    if num_nodes < g.num_nodes or num_edges < g.num_edges:
+        raise ValueError(
+            f"pad_graph cannot shrink: graph is (V={g.num_nodes}, "
+            f"E={g.num_edges}), target (V={num_nodes}, E={num_edges})")
+    dv, de = num_nodes - g.num_nodes, num_edges - g.num_edges
+    pad_edges = np.stack([np.zeros(de, np.int32),
+                          np.full(de, num_nodes, np.int32)])
+    return Graph(
+        name=g.name,
+        edge_index=np.concatenate([g.edge_index, pad_edges], axis=1),
+        num_nodes=num_nodes,
+        x=np.concatenate(
+            [g.x, np.zeros((dv, g.x.shape[1]), g.x.dtype)], axis=0),
+        labels=np.concatenate([g.labels, np.zeros(dv, g.labels.dtype)]),
+        deg_inv_sqrt=np.concatenate(
+            [g.deg_inv_sqrt, np.ones(dv, g.deg_inv_sqrt.dtype)]),
+        node_ptr=g.node_ptr,
+        edge_ptr=g.edge_ptr,
+        orig_num_nodes=v0,
+        orig_num_edges=e0,
+    )
+
+
+def unpad_nodes(padded: Graph, values):
+    """Slice a (V_padded, ...) per-node array back to the real rows."""
+    if padded.orig_num_nodes is None:
+        return values
+    return values[:padded.orig_num_nodes]
+
+
+def unpad_edges(padded: Graph, values):
+    """Slice an (E_padded, ...) per-edge array back to the real edges."""
+    if padded.orig_num_edges is None:
+        return values
+    return values[:padded.orig_num_edges]
+
+
+def unpad_graph(padded: Graph) -> Graph:
+    """Exact inverse of :func:`pad_graph` (array-for-array)."""
+    if padded.orig_num_nodes is None:
+        return padded
+    v0, e0 = padded.orig_num_nodes, padded.orig_num_edges
+    return Graph(
+        name=padded.name,
+        edge_index=padded.edge_index[:, :e0],
+        num_nodes=v0,
+        x=padded.x[:v0],
+        labels=padded.labels[:v0],
+        deg_inv_sqrt=padded.deg_inv_sqrt[:v0],
+        node_ptr=padded.node_ptr,
+        edge_ptr=padded.edge_ptr,
+    )
+
+
 def batch_graphs(graphs: Sequence[Graph], name: Optional[str] = None) -> Graph:
     """Block-diagonal multi-graph batching (PyG ``Batch`` convention).
 
@@ -114,6 +193,33 @@ def batch_graphs(graphs: Sequence[Graph], name: Optional[str] = None) -> Graph:
     aggregates the whole batch (no per-graph loop, no padding)."""
     if not graphs:
         raise ValueError("batch_graphs needs at least one graph")
+    if len(graphs) == 1 and graphs[0].node_ptr is None:
+        # single-graph fast path: the block-diagonal of one graph IS the
+        # graph — share its arrays (no concatenate copies) and carry over
+        # its memoized plans (safe: the plan describes these same arrays),
+        # so a serving loop batching [g] does not silently rebuild what
+        # g.make_plan already paid for
+        g = graphs[0]
+        out = Graph(
+            name=name or g.name,
+            edge_index=g.edge_index,
+            num_nodes=g.num_nodes,
+            x=g.x,
+            labels=g.labels,
+            deg_inv_sqrt=g.deg_inv_sqrt,
+            node_ptr=np.array([0, g.num_nodes], np.int64),
+            edge_ptr=np.array([0, g.num_edges], np.int64),
+            orig_num_nodes=g.orig_num_nodes,
+            orig_num_edges=g.orig_num_edges,
+        )
+        out._plan_cache.update(g._plan_cache)
+        return out
+    if any(g.orig_num_nodes is not None for g in graphs):
+        # a padded member's drop edges (dst = its padded V) would offset
+        # onto the NEXT member's first node and aggregate into it — batch
+        # first, pad the batch (the serving engine's order)
+        raise ValueError("batch_graphs cannot batch padded graphs; "
+                         "batch first, then pad_graph the batch")
     node_ptr = np.zeros(len(graphs) + 1, np.int64)
     edge_ptr = np.zeros(len(graphs) + 1, np.int64)
     for i, g in enumerate(graphs):

@@ -16,6 +16,7 @@ wall-clock tuning sweep never runs at trace time.
 from __future__ import annotations
 
 import collections
+import contextlib
 import os
 from typing import Optional
 
@@ -61,6 +62,29 @@ def fusion_counts() -> dict:
 
 def reset_fusion_counts() -> None:
     _FUSION_COUNTS.clear()
+
+
+@contextlib.contextmanager
+def fusion_scope():
+    """Scoped fusion accounting: inside the block the counters start at
+    zero and only record events of the block; on exit the scope's events
+    are folded back into the enclosing counters, so global accounting
+    still accumulates. Yields the scope's live Counter — read it at the
+    end of the block (or via :func:`fusion_counts` inside it).
+
+    This is what per-request accounting needs (e.g. the serving engine's
+    per-request fusion audit): without a scope, every request's trace
+    events pile onto one process-wide counter and no per-request
+    attribution is possible. Scopes nest."""
+    global _FUSION_COUNTS
+    outer = _FUSION_COUNTS
+    inner = collections.Counter()
+    _FUSION_COUNTS = inner
+    try:
+        yield inner
+    finally:
+        _FUSION_COUNTS = outer
+        outer.update(inner)
 
 
 def _resolve_config(config: Optional[KernelConfig], plan, idx_size: int,

@@ -198,7 +198,15 @@ def _segment_softmax_impl(x, idx, num_segments: int, config: KernelConfig,
         out_shape=jax.ShapeDtypeStruct((m_pad, h_pad), jnp.float32),
         interpret=interpret,
     )(chunk_first, chunk_count, idx2d, xp)
-    return out[:m, :h].astype(x.dtype)
+    out = out[:m, :h]
+    # rows of dropped segments (idx >= num_segments, the padding convention
+    # of pad_graph / partition) belong to no output block, so no phase-1 DMA
+    # ever writes them — the buffer holds garbage there (NaN under the
+    # interpreter). Define them as 0: a later weighted aggregation treats α
+    # as a per-edge weight, and the PR schedule's one-hot masking multiplies
+    # rather than selects, so 0·NaN would poison real outputs.
+    out = jnp.where((idx < num_segments)[:, None], out, 0.0)
+    return out.astype(x.dtype)
 
 
 def segment_softmax_pallas(x, idx, num_segments: int,

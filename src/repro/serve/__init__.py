@@ -1,0 +1,22 @@
+"""GNN inference serving: shape-bucketed padding, plan/executable cache,
+and block-diagonal continuous batching over the planned Pallas path.
+
+See ``docs/serving.md`` for the design; entry point:
+
+    from repro.serve import GNNServer
+    server = GNNServer(params, "gcn", impl="pallas")
+    uid = server.submit(graph)
+    server.run_until_drained()
+    logits = server.results[uid].logits
+"""
+from repro.serve.batcher import GraphBatcher, GraphRequest
+from repro.serve.buckets import (BucketPolicy, ShapeBucket, bucket_for,
+                                 bucket_rungs, pad_to_bucket)
+from repro.serve.engine import GNNServer, ServedResult
+from repro.serve.plan_cache import (BucketEntry, CacheStats, PlanCache,
+                                    measured_config)
+
+__all__ = ["GNNServer", "ServedResult", "GraphBatcher", "GraphRequest",
+           "BucketPolicy", "ShapeBucket", "bucket_for", "bucket_rungs",
+           "pad_to_bucket", "BucketEntry", "CacheStats", "PlanCache",
+           "measured_config"]

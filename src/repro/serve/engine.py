@@ -1,0 +1,344 @@
+"""GNNServer: synchronous GNN inference serving over the planned Pallas
+path.
+
+One ``step()`` of the serving loop:
+
+    queue ──GraphBatcher──▶ block-diagonal batch (batch_graphs)
+          ──buckets──────▶ pad to the batch's ShapeBucket (drop-id edges)
+          ──PlanCache────▶ BucketEntry: canonical config / max_chunks /
+                           stats + the jit executable for this bucket
+          ──stamp────────▶ per-request chunk metadata (plan leaves only)
+          ──executable───▶ models/gnn.forward, one compiled program per
+                           bucket, retrace-free across requests
+          ──unpad/unbatch▶ per-request logits + latency / fusion stats
+
+Compile discipline: the executable is keyed on the bucket (and the
+entry's bucket-static plan aux), so a stream of arbitrary-shape graphs
+triggers **at most one compile per bucket touched** — the property the
+acceptance tests pin. A cache hit performs zero ``make_plan`` / config
+selection / trace work; the per-request cost is one ``searchsorted``
+stamp plus the padded forward.
+
+``shards > 1`` routes the same loop through the partitioned path
+(:mod:`repro.core.dist_mp`): the *padded* batch is partitioned per
+request, so all shard shapes are bucket-derived; the partition's own
+static aux (node boundaries, halo) still varies with the degree
+distribution, so sharded serving trades the one-compile-per-bucket
+guarantee for mesh execution (documented in ``docs/serving.md``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.graphs import (Graph, batch_graphs, synth_graph,
+                               unbatch_nodes, unpad_nodes)
+from repro.models import gnn
+from repro.serve.batcher import GraphBatcher, GraphRequest
+from repro.serve.buckets import BucketPolicy, ShapeBucket, pad_to_bucket
+from repro.serve.plan_cache import (BucketEntry, PlanCache, bucket_max_chunks,
+                                    measured_config)
+
+__all__ = ["ServedResult", "GNNServer"]
+
+
+@dataclasses.dataclass
+class ServedResult:
+    """Per-request outcome + the latency/efficiency breakdown."""
+    uid: int
+    logits: np.ndarray            # (V_request, C)
+    bucket: ShapeBucket
+    batch_size: int               # graphs co-served in this step
+    queue_s: float                # submit -> admission
+    serve_s: float                # batch -> pad -> stamp -> forward
+    latency_s: float              # submit -> result
+    cache_hit: bool
+    compiled: bool                # this step paid the bucket's compile
+    pad_nodes: int                # bucket V minus batch V (waste)
+    pad_edges: int
+    fusion: Dict[str, int]        # trace-time fusion audit (compile steps
+    #                               only — cache hits trace nothing)
+
+
+class GNNServer:
+    """Synchronous serving engine for one (model family, params) pair.
+
+    ``submit()`` enqueues graphs; ``step()`` serves one micro-batch;
+    ``run_until_drained()`` loops. All four model families work (GCN /
+    GIN / SAGE / multi-head GAT — heads are carried by ``params``).
+
+    Knobs (the SLO surface, see ``docs/serving.md``): bucket ``policy``
+    (pad waste vs compile count), ``cache_capacity`` (executables held),
+    batch budget + ``max_wait_s`` (throughput vs tail latency), ``tune``
+    (pay autotuner sweeps at warmup for measured kernel configs).
+    """
+
+    def __init__(self, params, model: str, *, impl: str = "pallas",
+                 feat: Optional[int] = None,
+                 policy: Optional[BucketPolicy] = None,
+                 cache_capacity: int = 32,
+                 max_batch_nodes: int = 4096,
+                 max_batch_edges: Optional[int] = None,
+                 max_batch_graphs: int = 16,
+                 max_wait_s: float = 0.0,
+                 tune: Optional[bool] = None,
+                 shards: int = 0,
+                 perfdb=None):
+        if model not in gnn.MODELS:
+            raise ValueError(f"unknown model {model!r}; one of {gnn.MODELS}")
+        self.params = params
+        self.model = model
+        self.impl = impl
+        self.feat = int(feat) if feat is not None else _widest_layer(params)
+        self.policy = policy or BucketPolicy()
+        self.tune = tune
+        self.shards = int(shards)
+        if perfdb is None:
+            # one PerfDB instance for the engine's lifetime: it parses the
+            # on-disk JSON once and serves every bucket build from memory
+            from repro.core.autotune import PerfDB
+            perfdb = PerfDB()
+        self._perfdb = perfdb
+        self._mesh = None
+        if self.shards > 1:
+            from repro.core.dist_mp import make_shard_mesh
+            self._mesh = make_shard_mesh(self.shards)
+        self.cache = PlanCache(capacity=cache_capacity)
+        self.batcher = GraphBatcher(max_batch_nodes=max_batch_nodes,
+                                    max_batch_edges=max_batch_edges,
+                                    max_batch_graphs=max_batch_graphs,
+                                    max_wait_s=max_wait_s)
+        self._uid = 0
+        self._trace_events = 0        # bumped inside executables at trace
+        self.results: Dict[int, ServedResult] = {}
+        self._latencies: List[float] = []
+        self._batches = 0
+        self._serve_s = 0.0           # wall time inside step() serving
+        self._pad_node_frac: List[float] = []
+        self._pad_edge_frac: List[float] = []
+
+    # -- admission -----------------------------------------------------------
+    def submit(self, graph: Graph, uid: Optional[int] = None) -> int:
+        """Enqueue one graph; returns its request id."""
+        if graph.orig_num_nodes is not None:
+            raise ValueError("submit expects unpadded graphs; the engine "
+                             "pads to its own buckets")
+        if uid is not None and (uid in self.results
+                                or any(r.uid == uid
+                                       for r in self.batcher.queue)):
+            raise ValueError(f"duplicate request uid {uid}: its result "
+                             "would silently overwrite the earlier one")
+        if uid is None:
+            uid = self._uid
+        self._uid = max(self._uid, uid) + 1
+        self.batcher.submit(GraphRequest(uid=uid, graph=graph))
+        return uid
+
+    # -- cache entries -------------------------------------------------------
+    def _entry_key(self, bucket: ShapeBucket):
+        return (bucket, self.feat, self.model, self.impl, self.shards)
+
+    def _build_entry(self, bucket: ShapeBucket) -> BucketEntry:
+        """Resolve the bucket's canonical config and build its cache line.
+
+        Precedence: measured PerfDB winner for the bucket's shape class
+        (pure lookup — serving never sweeps inline) > with ``tune=True``,
+        a fresh autotuner sweep (warmup-only territory), stored under the
+        *same* (E_bucket, V_bucket, feat) shape class and the same DB the
+        lookup reads so the next engine replays it for free > the
+        generated decision-tree rules."""
+        config = measured_config(bucket, self.feat, db=self._perfdb)
+        if config is None and self.tune:
+            from repro.core import autotune
+            config = autotune.tune(
+                op="segment_reduce", idx_size=max(bucket.num_edges, 1),
+                num_segments=max(bucket.num_nodes, 1), feat=self.feat,
+                db=self._perfdb).config
+        if config is None:
+            from repro.core.heuristics import select_config
+            config = select_config(
+                max(bucket.num_edges, 1),
+                max(min(bucket.num_edges, bucket.num_nodes), 1),
+                self.feat, tune=False)
+        entry = BucketEntry(bucket, self.feat, config,
+                            max_chunks=bucket_max_chunks(bucket, config))
+        entry.executable = self._make_executable(bucket)
+        return entry
+
+    def _make_executable(self, bucket: ShapeBucket):
+        """One jitted forward per bucket. The plan rides as a pytree arg:
+        its leaves (chunk metadata) change per request, its static aux is
+        pinned by the entry — so re-invocation never retraces. The
+        trace-counter bump is a Python side effect and fires only while
+        tracing: it IS the compile counter the stats report."""
+        num_nodes, model, impl = bucket.num_nodes, self.model, self.impl
+
+        if self.shards > 1:
+            mesh = self._mesh
+
+            def fwd_sharded(params, x, edge_index, dis, plan, partition):
+                self._trace_events += 1
+                return gnn.forward(params, model, x, edge_index, num_nodes,
+                                   dis, impl=impl, plan=plan, mesh=mesh,
+                                   partition=partition)
+            return jax.jit(fwd_sharded)
+
+        def fwd(params, x, edge_index, dis, plan):
+            self._trace_events += 1
+            return gnn.forward(params, model, x, edge_index, num_nodes, dis,
+                               impl=impl, plan=plan)
+        return jax.jit(fwd)
+
+    # -- one serving iteration ----------------------------------------------
+    def step(self, flush: bool = False) -> List[ServedResult]:
+        """Admit one micro-batch and serve it; [] when the batcher holds."""
+        reqs = self.batcher.next_batch(flush=flush)
+        if not reqs:
+            return []
+        t0 = time.perf_counter()
+        batch = batch_graphs([r.graph for r in reqs])
+        padded, bucket = pad_to_bucket(batch, self.policy)
+        entry = self.cache.get_or_build(
+            self._entry_key(bucket),
+            lambda: self._build_entry(bucket),
+            weight=len(reqs))
+        hit = entry.compiled
+
+        from repro.kernels.ops import fusion_scope
+        traces_before = self._trace_events
+        with fusion_scope() as fusion:
+            logits = self._run(entry, padded)
+        logits = np.asarray(jax.block_until_ready(logits))
+        if not entry.compiled:
+            entry.compiled = True
+            entry.compile_s = time.perf_counter() - t0
+            self.cache.stats.compile_s += entry.compile_s
+        self.cache.stats.compiles += self._trace_events - traces_before
+
+        t1 = time.perf_counter()
+        self._batches += 1
+        self._serve_s += t1 - t0
+        self._pad_node_frac.append(bucket.num_nodes / max(batch.num_nodes, 1))
+        self._pad_edge_frac.append(bucket.num_edges / max(batch.num_edges, 1))
+        per_graph = unbatch_nodes(batch, unpad_nodes(padded, logits))
+        fusion_counts = dict(fusion)
+        out = []
+        for req, y in zip(reqs, per_graph):
+            res = ServedResult(
+                uid=req.uid, logits=y, bucket=bucket, batch_size=len(reqs),
+                queue_s=t0 - req.t_submit, serve_s=t1 - t0,
+                latency_s=t1 - req.t_submit, cache_hit=hit,
+                compiled=not hit,
+                pad_nodes=bucket.num_nodes - batch.num_nodes,
+                pad_edges=bucket.num_edges - batch.num_edges,
+                fusion=fusion_counts)
+            self.results[req.uid] = res
+            self._latencies.append(res.latency_s)
+            out.append(res)
+        return out
+
+    def _run(self, entry: BucketEntry, padded: Graph):
+        x = jnp.asarray(padded.x)
+        dis = jnp.asarray(padded.deg_inv_sqrt)
+        ei = jnp.asarray(padded.edge_index)
+        if self.shards > 1:
+            # the sharded path consumes a PartitionedPlan; the bucket
+            # template's stamp is single-device-only and is skipped here
+            from repro.core.plan import make_partitioned_plan
+            from repro.data.partition import partition_graph
+            pg = partition_graph(padded, self.shards)
+            pplan = make_partitioned_plan(pg, feat=self.feat,
+                                          config=entry.config)
+            return entry.executable(self.params, x, ei, dis, pplan, pg)
+        plan = entry.stamp(padded.edge_index[1])
+        return entry.executable(self.params, x, ei, dis, plan)
+
+    def run_until_drained(self, max_steps: int = 100_000
+                          ) -> Dict[int, ServedResult]:
+        steps = 0
+        while self.batcher.queue and steps < max_steps:
+            self.step(flush=True)
+            steps += 1
+        return self.results
+
+    # -- warmup ---------------------------------------------------------------
+    def warmup(self, buckets: Sequence[ShapeBucket]) -> int:
+        """Prefill cache lines and compile their executables ahead of
+        traffic, against an all-padding synthetic member of each bucket
+        (every edge a drop edge — shape-complete, data-free). With
+        ``tune=True`` this is also where autotuner sweeps are paid.
+        Returns the number of entries compiled; prefills do not count as
+        cache misses."""
+        buckets = list(buckets)
+        if len(buckets) > self.cache.capacity:
+            raise ValueError(
+                f"warming {len(buckets)} buckets into a capacity-"
+                f"{self.cache.capacity} cache would evict the earliest "
+                "prefills immediately; raise cache_capacity")
+        compiled = 0
+        for bucket in buckets:
+            entry = self.cache.warm(self._entry_key(bucket),
+                                    lambda b=bucket: self._build_entry(b))
+            if entry.compiled:
+                continue
+            g = synth_graph(f"warmup-{bucket}", min(2, bucket.num_nodes), 0,
+                            feat=_input_feat(self.params, self.model))
+            padded, _ = pad_to_bucket(g, bucket=bucket)
+            t0 = time.perf_counter()
+            traces_before = self._trace_events
+            jax.block_until_ready(self._run(entry, padded))
+            entry.compiled = True
+            entry.compile_s = time.perf_counter() - t0
+            self.cache.stats.compile_s += entry.compile_s
+            self.cache.stats.compiles += self._trace_events - traces_before
+            compiled += 1
+        return compiled
+
+    # -- stats ----------------------------------------------------------------
+    @property
+    def compiles(self) -> int:
+        """Executable traces so far (warmup + serving)."""
+        return self._trace_events
+
+    def stats(self) -> Dict:
+        lat = np.asarray(self._latencies) if self._latencies else None
+        return {
+            "requests": len(self.results),
+            "batches": self._batches,
+            "mean_batch_size": (len(self.results) / self._batches
+                                if self._batches else 0.0),
+            "compiles": self._trace_events,
+            "buckets": len(self.cache),
+            "cache": self.cache.stats.as_dict(),
+            "throughput_rps": (len(self.results) / self._serve_s
+                               if self._serve_s else 0.0),
+            "latency_mean_s": float(lat.mean()) if lat is not None else 0.0,
+            "latency_p95_s": (float(np.percentile(lat, 95))
+                              if lat is not None else 0.0),
+            "pad_node_overhead": (float(np.mean(self._pad_node_frac))
+                                  if self._pad_node_frac else 1.0),
+            "pad_edge_overhead": (float(np.mean(self._pad_edge_frac))
+                                  if self._pad_edge_frac else 1.0),
+        }
+
+
+def _widest_layer(params) -> int:
+    """The representative feature width for config selection: the widest
+    trailing dim of any >=2-D parameter (mirrors make_model_plan's
+    'widest layer width' guidance)."""
+    dims = [int(a.shape[-1]) for a in jax.tree_util.tree_leaves(params)
+            if hasattr(a, "ndim") and a.ndim >= 2]
+    return max(dims, default=128)
+
+
+_FIRST_W = {"gcn": "w", "gin": "mlp1", "sage": "w_self", "gat": "w"}
+
+
+def _input_feat(params, model: str) -> int:
+    """d_in of the first layer (for warmup's synthetic graphs)."""
+    return int(params[0][_FIRST_W[model]].value.shape[0])

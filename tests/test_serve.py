@@ -1,0 +1,487 @@
+"""Serving subsystem: bucket padding invariance, plan/executable cache
+accounting, continuous batching, and GNNServer end-to-end parity."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.config_space import KernelConfig
+from repro.core.mp import mp
+from repro.core.plan import make_graph_plan
+from repro.data.graphs import (batch_graphs, pad_graph, synth_graph,
+                               unpad_edges, unpad_graph, unpad_nodes)
+from repro.kernels import ops as kops
+from repro.models import gnn
+from repro.serve import (BucketPolicy, GNNServer, GraphBatcher, GraphRequest,
+                         PlanCache, ShapeBucket, bucket_for, pad_to_bucket)
+from repro.serve.plan_cache import BucketEntry
+
+KEY = jax.random.PRNGKey(0)
+CFG = KernelConfig("SR", 64, 128, 64, 1)
+
+
+# ---------------------------------------------------------------------------
+# pad_graph round trips
+# ---------------------------------------------------------------------------
+
+def test_pad_graph_round_trip():
+    g = synth_graph("g", 50, 170, feat=8, seed=0)
+    p = pad_graph(g, 64, 256)
+    assert (p.num_nodes, p.num_edges) == (64, 256)
+    assert (p.orig_num_nodes, p.orig_num_edges) == (50, 170)
+    # padded edges carry the drop id; destinations stay sorted
+    assert np.all(p.edge_index[1, 170:] == 64)
+    assert np.all(np.diff(p.edge_index[1]) >= 0)
+    vals = np.arange(64 * 3).reshape(64, 3)
+    np.testing.assert_array_equal(unpad_nodes(p, vals), vals[:50])
+    evals = np.arange(256)
+    np.testing.assert_array_equal(unpad_edges(p, evals), evals[:170])
+    back = unpad_graph(p)
+    np.testing.assert_array_equal(back.edge_index, g.edge_index)
+    np.testing.assert_array_equal(back.x, g.x)
+    np.testing.assert_array_equal(back.deg_inv_sqrt, g.deg_inv_sqrt)
+    assert back.num_nodes == g.num_nodes
+    # double padding keeps the innermost real sizes
+    pp = pad_graph(p, 128, 512)
+    assert (pp.orig_num_nodes, pp.orig_num_edges) == (50, 170)
+
+
+def test_pad_graph_rejects_shrink():
+    g = synth_graph("g", 50, 170, feat=4, seed=0)
+    with pytest.raises(ValueError, match="shrink"):
+        pad_graph(g, 32, 256)
+
+
+def test_unpad_is_noop_on_unpadded():
+    g = synth_graph("g", 20, 40, feat=4, seed=1)
+    vals = np.arange(20)
+    assert unpad_nodes(g, vals) is vals
+    assert unpad_graph(g) is g
+
+
+# ---------------------------------------------------------------------------
+# batch_graphs: single-graph fast path + padded-member guard
+# ---------------------------------------------------------------------------
+
+def test_batch_single_graph_fast_path_preserves_plan_memo():
+    g = synth_graph("g", 40, 120, feat=8, seed=2)
+    plan = g.make_plan(feat=16, config=CFG)
+    b = batch_graphs([g])
+    assert b.num_graphs == 1
+    # arrays shared, not copied; the memoized plan is carried over
+    assert b.edge_index is g.edge_index and b.x is g.x
+    assert b.make_plan(feat=16, config=CFG) is plan
+    np.testing.assert_array_equal(b.node_ptr, [0, 40])
+    np.testing.assert_array_equal(b.edge_ptr, [0, 120])
+
+
+def test_batch_rejects_padded_members():
+    g = synth_graph("g", 40, 120, feat=4, seed=2)
+    p = pad_graph(g, 64, 128)
+    with pytest.raises(ValueError, match="padded"):
+        batch_graphs([p, g])
+
+
+# ---------------------------------------------------------------------------
+# buckets
+# ---------------------------------------------------------------------------
+
+def test_bucket_ladder():
+    pol = BucketPolicy(min_nodes=64, min_edges=64)
+    assert bucket_for(1, 1, pol) == ShapeBucket(64, 64)
+    assert bucket_for(64, 65, pol) == ShapeBucket(64, 128)
+    assert bucket_for(700, 3000, pol) == ShapeBucket(1024, 4096)
+    with pytest.raises(ValueError):
+        BucketPolicy(growth=1.0)
+
+
+def test_pad_to_bucket_round_trip():
+    g = synth_graph("g", 90, 300, feat=8, seed=3)
+    padded, bucket = pad_to_bucket(g)
+    assert bucket == ShapeBucket(128, 512)
+    assert (padded.num_nodes, padded.num_edges) == (128, 512)
+    assert unpad_graph(padded).num_nodes == 90
+
+
+# ---------------------------------------------------------------------------
+# padding invariance (the property the whole serving path stands on):
+# logits over the real nodes are unchanged by drop-id padding, for all
+# four reduces, under the same kernel config. Deterministic sweep here;
+# the randomized hypothesis version lives in test_serve_property.py.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("reduce", ["sum", "mean", "max"])
+@pytest.mark.parametrize("ve", [(37, 120), (64, 64), (5, 0)])
+def test_padding_invariance_mp(reduce, ve):
+    g = synth_graph("det", *ve, feat=7, seed=11)
+    p = pad_graph(g, ve[0] + 27, ve[1] + 40)
+    plan = make_graph_plan(g.edge_index, g.num_nodes, config=CFG)
+    plan_p = make_graph_plan(p.edge_index, p.num_nodes, config=CFG)
+    want = mp(jnp.asarray(g.x), jnp.asarray(g.edge_index), g.num_nodes,
+              reduce=reduce, plan=plan, impl="pallas")
+    got = mp(jnp.asarray(p.x), jnp.asarray(p.edge_index), p.num_nodes,
+             reduce=reduce, plan=plan_p, impl="pallas")
+    np.testing.assert_allclose(unpad_nodes(p, got), want,
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_padding_invariance_softmax():
+    from repro.core import ops as geot
+    g = synth_graph("det", 37, 120, feat=4, seed=11)
+    p = pad_graph(g, 64, 160)
+    rng = np.random.default_rng(0)
+    logits = rng.standard_normal((g.num_edges, 2)).astype(np.float32)
+    pad = np.zeros((p.num_edges - g.num_edges, 2), np.float32)
+    plan = make_graph_plan(g.edge_index, g.num_nodes, config=CFG)
+    plan_p = make_graph_plan(p.edge_index, p.num_nodes, config=CFG)
+    want = geot.segment_softmax(jnp.asarray(logits),
+                                jnp.asarray(g.edge_index[1]), g.num_nodes,
+                                "pallas", None, plan)
+    got = geot.segment_softmax(jnp.asarray(np.concatenate([logits, pad])),
+                               jnp.asarray(p.edge_index[1]), p.num_nodes,
+                               "pallas", None, plan_p)
+    np.testing.assert_allclose(unpad_edges(p, got), want,
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# fusion accounting scopes
+# ---------------------------------------------------------------------------
+
+def test_fusion_scope_isolates_and_accumulates():
+    kops.reset_fusion_counts()
+    kops.account("fused", "outer_op")
+    with kops.fusion_scope() as inner:
+        assert kops.fusion_counts() == {}          # scope starts clean
+        kops.account("fused", "inner_op")
+        with kops.fusion_scope() as nested:
+            kops.account("unfused", "nested_op")
+        assert dict(nested) == {"unfused:nested_op": 1}
+        # nested events folded back into the enclosing scope
+        assert inner["unfused:nested_op"] == 1
+        assert inner["fused:inner_op"] == 1
+    counts = kops.fusion_counts()                  # global accumulates all
+    assert counts["fused:outer_op"] == 1
+    assert counts["fused:inner_op"] == 1
+    assert counts["unfused:nested_op"] == 1
+    kops.reset_fusion_counts()
+
+
+# ---------------------------------------------------------------------------
+# plan cache
+# ---------------------------------------------------------------------------
+
+def _entry(bucket):
+    return BucketEntry(bucket, feat=16, config=CFG)
+
+
+def test_plan_cache_lru_eviction():
+    cache = PlanCache(capacity=2)
+    b1, b2, b3 = (ShapeBucket(64, 64), ShapeBucket(64, 128),
+                  ShapeBucket(128, 128))
+    cache.get_or_build(b1, lambda: _entry(b1))
+    cache.get_or_build(b2, lambda: _entry(b2))
+    cache.get_or_build(b1, lambda: _entry(b1))     # touch b1 -> b2 is LRU
+    cache.get_or_build(b3, lambda: _entry(b3))     # evicts b2
+    assert cache.stats.evictions == 1
+    assert set(cache.keys()) == {b1, b3}
+    assert cache.lookup(b2) is None                # b2 is gone (miss)
+
+
+def test_plan_cache_hit_accounting_and_weights():
+    cache = PlanCache(capacity=4)
+    b = ShapeBucket(64, 64)
+    cache.get_or_build(b, lambda: _entry(b), weight=3)   # 3-request miss
+    cache.get_or_build(b, lambda: _entry(b), weight=5)   # 5-request hit
+    assert (cache.stats.hits, cache.stats.misses) == (5, 3)
+    assert cache.stats.hit_rate == pytest.approx(5 / 8)
+    assert cache.stats.plan_builds == 1
+    assert cache.stats.plan_build_s > 0
+
+
+def test_plan_cache_warm_is_not_a_miss():
+    cache = PlanCache(capacity=4)
+    b = ShapeBucket(64, 64)
+    cache.warm(b, lambda: _entry(b))
+    assert (cache.stats.hits, cache.stats.misses) == (0, 0)
+    assert cache.stats.prefills == 1
+    assert cache.lookup(b) is not None             # served as a hit
+    assert cache.stats.hits == 1
+
+
+def test_stamp_keeps_treedef_and_covers_any_member():
+    """Stamped plans share the template's treedef (no retrace trigger) and
+    the bucket-static max_chunks bounds every member's tight value."""
+    b = ShapeBucket(128, 256)
+    entry = _entry(b)
+    g = synth_graph("g", 100, 200, feat=8, seed=4)
+    p = pad_graph(g, 128, 256)
+    plan = entry.stamp(p.edge_index[1])
+    t1 = jax.tree_util.tree_structure(entry.template)
+    t2 = jax.tree_util.tree_structure(plan)
+    assert t1 == t2
+    assert int(jnp.max(plan.chunk_count)) <= entry.max_chunks
+    with pytest.raises(ValueError, match="padded edges"):
+        entry.stamp(g.edge_index[1])               # unpadded: wrong length
+
+
+def test_cache_hit_zero_make_plan_zero_compile(monkeypatch):
+    """The acceptance property at unit scale: a second same-bucket request
+    performs no plan construction, no config selection, and no trace."""
+    import repro.core.heuristics as heuristics
+    import repro.core.plan as plan_mod
+
+    params = gnn.init(KEY, "gin", 8, 16, 4)
+    srv = GNNServer(params, "gin", impl="pallas",
+                    policy=BucketPolicy(min_nodes=32, min_edges=32))
+    g1 = synth_graph("a", 30, 60, feat=8, seed=0)
+    g2 = synth_graph("b", 25, 50, feat=8, seed=1)   # same (32, 64) bucket
+    srv.submit(g1)
+    srv.run_until_drained()
+    assert srv.compiles == 1
+
+    calls = {"make_plan": 0, "select_config": 0}
+    real_mp, real_sc = plan_mod.make_plan, heuristics.select_config
+
+    def spy_mp(*a, **k):
+        calls["make_plan"] += 1
+        return real_mp(*a, **k)
+
+    def spy_sc(*a, **k):
+        calls["select_config"] += 1
+        return real_sc(*a, **k)
+
+    monkeypatch.setattr(plan_mod, "make_plan", spy_mp)
+    monkeypatch.setattr(heuristics, "select_config", spy_sc)
+    srv.submit(g2)
+    srv.run_until_drained()
+    assert calls == {"make_plan": 0, "select_config": 0}
+    assert srv.compiles == 1                        # zero new traces
+    assert srv.cache.stats.hits == 1
+    assert srv.results[1].cache_hit and not srv.results[1].compiled
+
+
+# ---------------------------------------------------------------------------
+# batcher
+# ---------------------------------------------------------------------------
+
+def _req(uid, v, e, t=0.0):
+    return GraphRequest(uid=uid, graph=synth_graph(f"r{uid}", v, e, feat=4,
+                                                   seed=uid), t_submit=t)
+
+
+def test_batcher_budget_and_fifo():
+    b = GraphBatcher(max_batch_nodes=100, max_batch_graphs=8)
+    for uid, v in enumerate([40, 40, 40, 10]):
+        b.submit(_req(uid, v, 2 * v))
+    first = b.next_batch(now=0.0)
+    assert [r.uid for r in first] == [0, 1]         # 3rd would blow budget
+    second = b.next_batch(now=0.0)
+    assert [r.uid for r in second] == [2, 3]
+    assert b.next_batch(now=0.0) == []
+
+
+def test_batcher_oversize_singleton():
+    b = GraphBatcher(max_batch_nodes=50)
+    b.submit(_req(0, 200, 300))
+    batch = b.next_batch(now=0.0)
+    assert [r.uid for r in batch] == [0]
+
+
+def test_batcher_edge_budget():
+    b = GraphBatcher(max_batch_nodes=1000, max_batch_edges=100)
+    b.submit(_req(0, 10, 80))
+    b.submit(_req(1, 10, 80))
+    assert [r.uid for r in b.next_batch(now=0.0)] == [0]
+
+
+def test_batcher_deadline_holds_then_releases():
+    b = GraphBatcher(max_batch_nodes=1000, max_batch_graphs=8,
+                     max_wait_s=10.0)
+    b.submit(_req(0, 10, 20, t=100.0))
+    assert b.next_batch(now=100.1) == []            # under budget + deadline
+    assert len(b.queue) == 1                        # requeued intact
+    assert [r.uid for r in b.next_batch(now=110.1)] == [0]   # deadline hit
+    b.submit(_req(1, 10, 20, t=200.0))
+    assert [r.uid for r in b.next_batch(now=200.0, flush=True)] == [1]
+
+
+def test_batcher_saturated_batch_releases_with_empty_queue():
+    """A batch at the graph-count cap cannot grow; holding it for the
+    deadline would be pure added latency."""
+    b = GraphBatcher(max_batch_nodes=1000, max_batch_graphs=2,
+                     max_wait_s=60.0)
+    b.submit(_req(0, 10, 20, t=0.0))
+    b.submit(_req(1, 10, 20, t=0.0))
+    assert [r.uid for r in b.next_batch(now=0.1)] == [0, 1]
+
+
+def test_batcher_releases_when_budget_full():
+    b = GraphBatcher(max_batch_nodes=50, max_wait_s=1e9)
+    b.submit(_req(0, 40, 60, t=0.0))
+    b.submit(_req(1, 40, 60, t=0.0))
+    # deadline far away, but the next request cannot fit: release now
+    assert [r.uid for r in b.next_batch(now=0.0)] == [0]
+
+
+# ---------------------------------------------------------------------------
+# GNNServer end to end
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("model", gnn.MODELS)
+@pytest.mark.timeout(300)
+def test_server_parity_all_models(model):
+    """Served logits == direct per-request planned forward, compiles
+    bounded by buckets, every request completes."""
+    heads = 2 if model == "gat" else 1
+    params = gnn.init(KEY, model, 8, 16, 4, heads=heads)
+    srv = GNNServer(params, model, impl="pallas",
+                    policy=BucketPolicy(min_nodes=32, min_edges=32),
+                    max_batch_nodes=128, max_batch_graphs=3)
+    rng = np.random.default_rng(0)
+    graphs = [synth_graph(f"g{i}", int(rng.integers(16, 100)),
+                          int(rng.integers(20, 250)), feat=8, seed=i)
+              for i in range(6)]
+    for g in graphs:
+        srv.submit(g)
+    srv.run_until_drained()
+    s = srv.stats()
+    assert len(srv.results) == 6
+    assert s["compiles"] <= s["buckets"]
+    for uid, g in enumerate(graphs):
+        plan = g.make_plan(feat=16)
+        want = gnn.forward(params, model, jnp.asarray(g.x),
+                           jnp.asarray(g.edge_index), g.num_nodes,
+                           jnp.asarray(g.deg_inv_sqrt), impl="pallas",
+                           plan=plan)
+        np.testing.assert_allclose(srv.results[uid].logits, np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+        assert srv.results[uid].logits.shape == (g.num_nodes, 4)
+        assert srv.results[uid].latency_s >= srv.results[uid].serve_s
+
+
+@pytest.mark.timeout(120)
+def test_server_warmup_makes_serving_hot():
+    params = gnn.init(KEY, "sage", 8, 16, 4)
+    srv = GNNServer(params, "sage", impl="pallas",
+                    policy=BucketPolicy(min_nodes=32, min_edges=32),
+                    max_batch_nodes=64, max_batch_graphs=1)
+    # singleton batches => the request's own bucket, known a priori
+    shapes = [(20, 40), (30, 100), (50, 200), (25, 60), (60, 180)]
+    buckets = [ShapeBucket(32, 64), ShapeBucket(32, 128),
+               ShapeBucket(64, 256)]
+    assert srv.warmup(buckets) == 3
+    assert srv.warmup(buckets) == 0                 # idempotent
+    compiles_after_warmup = srv.compiles
+    for i, (v, e) in enumerate(shapes):
+        srv.submit(synth_graph(f"g{i}", v, e, feat=8, seed=i))
+    srv.run_until_drained()
+    s = srv.stats()
+    assert srv.compiles == compiles_after_warmup    # serving traced nothing
+    assert s["cache"]["hit_rate"] == 1.0
+    assert s["cache"]["prefills"] == 3
+    assert s["cache"]["misses"] == 0
+
+
+@pytest.mark.timeout(120)
+def test_server_warmup_tiny_bucket_and_capacity_guard():
+    params = gnn.init(KEY, "gcn", 8, 16, 4)
+    srv = GNNServer(params, "gcn", impl="pallas",
+                    policy=BucketPolicy(min_nodes=1, min_edges=1))
+    # a V=1 bucket is legal under min_nodes=1 and must warm cleanly
+    assert srv.warmup([ShapeBucket(1, 1)]) == 1
+    tiny = GNNServer(params, "gcn", cache_capacity=2)
+    with pytest.raises(ValueError, match="capacity"):
+        tiny.warmup([ShapeBucket(64, 64), ShapeBucket(64, 128),
+                     ShapeBucket(128, 128)])
+
+
+@pytest.mark.timeout(180)
+def test_tuned_warmup_feeds_measured_lookup(tmp_path, monkeypatch):
+    """tune=True sweeps land under the exact shape-class key (and DB) the
+    serving-tier measured_config lookup reads back."""
+    from repro.core.autotune import PerfDB
+    from repro.serve import measured_config
+    monkeypatch.setenv("REPRO_AUTOTUNE_MAX_CONFIGS", "3")
+    monkeypatch.setenv("REPRO_AUTOTUNE_REPS", "1")
+    db = PerfDB(tmp_path / "perfdb.json")
+    params = gnn.init(KEY, "gin", 8, 16, 4)
+    srv = GNNServer(params, "gin", impl="pallas", tune=True, perfdb=db,
+                    policy=BucketPolicy(min_nodes=32, min_edges=32))
+    b = ShapeBucket(32, 64)
+    srv.warmup([b])
+    cfg = measured_config(b, srv.feat, db=db)
+    assert cfg is not None
+    # a second engine on the same DB resolves the measured winner for free
+    srv2 = GNNServer(params, "gin", impl="pallas", perfdb=db,
+                     policy=BucketPolicy(min_nodes=32, min_edges=32))
+    assert srv2._build_entry(b).config == cfg
+
+
+@pytest.mark.timeout(120)
+def test_server_empty_edge_and_tiny_graphs():
+    params = gnn.init(KEY, "gcn", 8, 16, 4)
+    srv = GNNServer(params, "gcn", impl="pallas",
+                    policy=BucketPolicy(min_nodes=32, min_edges=32))
+    g0 = synth_graph("iso", 5, 0, feat=8, seed=0)   # no edges at all
+    g1 = synth_graph("one", 1, 0, feat=8, seed=1)
+    srv.submit(g0)
+    srv.submit(g1)
+    srv.run_until_drained()
+    want = gnn.forward(params, "gcn", jnp.asarray(g0.x),
+                       jnp.asarray(g0.edge_index), g0.num_nodes,
+                       jnp.asarray(g0.deg_inv_sqrt), impl="pallas",
+                       plan=g0.make_plan(feat=16))
+    np.testing.assert_allclose(srv.results[0].logits, np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    assert srv.results[1].logits.shape == (1, 4)
+
+
+def test_server_rejects_padded_submission():
+    params = gnn.init(KEY, "gcn", 8, 16, 4)
+    srv = GNNServer(params, "gcn")
+    g = pad_graph(synth_graph("g", 10, 20, feat=8, seed=0), 32, 32)
+    with pytest.raises(ValueError, match="unpadded"):
+        srv.submit(g)
+
+
+@pytest.mark.timeout(120)
+def test_server_rejects_duplicate_uid():
+    params = gnn.init(KEY, "gcn", 8, 16, 4)
+    srv = GNNServer(params, "gcn", impl="pallas",
+                    policy=BucketPolicy(min_nodes=32, min_edges=32))
+    g = synth_graph("g", 10, 20, feat=8, seed=0)
+    srv.submit(g, uid=5)
+    with pytest.raises(ValueError, match="duplicate"):
+        srv.submit(g, uid=5)                       # still queued
+    srv.run_until_drained()
+    with pytest.raises(ValueError, match="duplicate"):
+        srv.submit(g, uid=5)                       # already served
+
+
+@pytest.mark.timeout(120)
+def test_server_request_stats_and_throughput():
+    params = gnn.init(KEY, "gin", 8, 16, 4)
+    srv = GNNServer(params, "gin", impl="pallas",
+                    policy=BucketPolicy(min_nodes=32, min_edges=32),
+                    max_batch_nodes=256, max_batch_graphs=4)
+    t0 = time.perf_counter()
+    for i in range(4):
+        srv.submit(synth_graph(f"g{i}", 40, 100, feat=8, seed=i))
+    srv.run_until_drained()
+    s = srv.stats()
+    assert s["requests"] == 4 and s["batches"] >= 1
+    assert s["throughput_rps"] > 0
+    assert 0 < s["latency_mean_s"] <= s["latency_p95_s"] + 1e-9
+    assert s["latency_p95_s"] < time.perf_counter() - t0 + 1.0
+    assert s["pad_node_overhead"] >= 1.0 and s["pad_edge_overhead"] >= 1.0
+    first = srv.results[0]
+    assert first.batch_size >= 1 and first.bucket.num_nodes >= 32
+    # the compiling batch carries a fused-kernel audit; GIN's aggregation
+    # is one fused launch per layer, never an unfused fallback
+    compile_steps = [r for r in srv.results.values() if r.compiled]
+    assert compile_steps
+    for r in compile_steps:
+        assert any(k.startswith("fused:") for k in r.fusion)
