@@ -17,7 +17,7 @@ import numpy as np
 
 from repro import configs as cfglib
 from repro.models import lm
-from repro.serving.scheduler import ContinuousBatcher, Request
+from repro.serve.lm import ContinuousBatcher, Request
 
 cfg = cfglib.get_config("qwen3-8b").reduced()
 params = lm.init(jax.random.PRNGKey(0), cfg)

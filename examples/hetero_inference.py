@@ -1,0 +1,104 @@
+"""Heterogeneous GNN inference on a relation-typed graph (FASTEN's
+workload): 3-layer RGCN / relational-GAT node classification where every
+layer's per-relation weight transforms run as **one** grouped
+``segment_matmul`` launch (never a Python loop over types).
+
+Everything goes through the public ``repro`` facade: a
+:class:`~repro.data.graphs.TypedGraph` precomputes the (type, dst)
+permutation triple once; ``make_plan`` / ``make_relation_plan`` build the
+fused-reduce and grouped-matmul schedules once per graph; the typed models
+consume both via the uniform layer signature. The grouped path is checked
+against a per-type Python-loop reference, and on ``--impl pallas`` the
+fusion counters verify exactly one ``segment_matmul`` launch per layer.
+
+    PYTHONPATH=src python examples/hetero_inference.py [--relations 8]
+                                                       [--impl ref|pallas]
+                                                       [--nodes N --edges E]
+"""
+import argparse
+import time
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--nodes", type=int, default=2048)
+ap.add_argument("--edges", type=int, default=16384)
+ap.add_argument("--relations", type=int, default=8)
+ap.add_argument("--hidden", type=int, default=64)
+ap.add_argument("--heads", type=int, default=2,
+                help="attention heads for the RGAT model")
+ap.add_argument("--impl", default="ref", choices=["ref", "pallas"],
+                help="aggregation backend (pallas runs interpreted on CPU)")
+ap.add_argument("--tune", action="store_true",
+                help="pick kernel configs from a measured autotuner sweep")
+args = ap.parse_args()
+
+import jax                    # noqa: E402
+import jax.numpy as jnp       # noqa: E402
+import numpy as np            # noqa: E402
+
+import repro                  # noqa: E402
+from repro.kernels import ops as kops  # noqa: E402
+
+g = repro.synth_typed_graph("hetero-demo", args.nodes, args.edges,
+                            num_relations=args.relations, feat=32, seed=0)
+counts = ", ".join(str(int(c)) for c in g.type_counts)
+print(f"{g.name}: |V|={g.num_nodes:,} |E|={g.num_edges:,} "
+      f"R={g.num_relations} (rows per relation: {counts})")
+
+t0 = time.perf_counter()
+plan = g.make_plan(feat=args.hidden, tune=args.tune or None)
+rplan = g.make_relation_plan(feat=args.hidden, tune=args.tune or None)
+print(f"  plans built in {(time.perf_counter() - t0) * 1e3:.1f} ms — "
+      f"reduce grid {plan.max_chunks} (of {plan.worst_case_chunks}), "
+      f"grouped grid {rplan.max_groups} (of {rplan.worst_case_groups})")
+
+x = jnp.asarray(g.x)
+ei = jnp.asarray(g.edge_index)
+et = jnp.asarray(g.edge_type)
+typed_kw = dict(edge_type=et, type_perm=jnp.asarray(g.type_perm),
+                inv_type_perm=jnp.asarray(g.inv_type_perm),
+                type_counts=jnp.asarray(g.type_counts), rplan=rplan)
+
+# per-type loop reference for the first RGCN layer's typed aggregation —
+# the thing the grouped launch replaces
+def per_type_loop_messages(x, w_rel):
+    src = g.edge_index[0]
+    msg = jnp.zeros((g.num_edges, w_rel.shape[-1]), x.dtype)
+    for r in range(g.num_relations):
+        sel = np.where(g.edge_type == r)[0]
+        msg = msg.at[sel].set(jnp.take(x, src[sel], axis=0) @ w_rel[r])
+    return msg
+
+
+for model in repro.TYPED_MODELS:
+    heads = args.heads if model == "rgat" else 1
+    params = repro.gnn_init(jax.random.PRNGKey(0), model, 32, args.hidden,
+                            16, num_relations=g.num_relations, heads=heads)
+    with kops.fusion_scope() as fused:
+        fwd = jax.jit(lambda p, x: repro.gnn_forward(
+            p, model, x, ei, g.num_nodes, impl=args.impl, plan=plan,
+            **typed_kw))
+        out = jax.block_until_ready(fwd(params, x))
+    launches = fused.get("fused:segment_matmul", 0)
+    if args.impl == "pallas":
+        assert launches == len(params), (
+            f"expected one grouped launch per layer, got {launches}")
+    t0 = time.perf_counter()
+    for _ in range(3):
+        out = jax.block_until_ready(fwd(params, x))
+    dt = (time.perf_counter() - t0) / 3
+    pred = jnp.argmax(out, -1)
+    tag = f" heads={heads}" if model == "rgat" and heads > 1 else ""
+    print(f"  {model:5s}: logits {out.shape}  {dt*1e3:7.1f} ms/inference "
+          f"({args.impl}{tag})  grouped launches: {launches} "
+          f"for {len(params)} layers  classes used: "
+          f"{len(jnp.unique(pred))}")
+
+# cross-check the grouped transform against the per-type loop
+w_rel = params[0]["w_rel"].value
+got = repro.grouped_segment_matmul(
+    jnp.asarray(g.x)[jnp.asarray(g.typed_src)], jnp.asarray(g.type_counts),
+    w_rel, args.impl, None, None)
+want = per_type_loop_messages(jnp.asarray(g.x), w_rel)[g.type_perm]
+err = float(jnp.max(jnp.abs(got - want)))
+assert err < 1e-4, f"grouped vs per-type loop diverged: {err}"
+print(f"  grouped vs per-type-loop parity: max|Δ| = {err:.2e}")

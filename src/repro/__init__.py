@@ -1,0 +1,72 @@
+"""repro — GeoT reproduction: tensor-centric segment reduction for GNNs
+(JAX/Pallas on TPU; interpret mode on CPU).
+
+One curated import surface over the layered packages, so examples and
+downstream code stop deep-importing module paths:
+
+    import repro
+
+    g = repro.synth_typed_graph("demo", 1024, 8192, num_relations=6)
+    plan = g.make_plan()                       # fused-reduce schedule
+    rplan = g.make_relation_plan()             # grouped-matmul schedule
+    params = repro.gnn_init(key, "rgcn", 32, 64, 16, num_relations=6)
+    logits = repro.gnn_forward(params, "rgcn", x, edge_index, g.num_nodes,
+                               impl="pallas", plan=plan, rplan=rplan,
+                               edge_type=g.edge_type)
+
+Layers underneath (deep imports remain supported):
+    repro.core    — ops + plans + config selection/autotune
+    repro.kernels — the Pallas kernels and their jit'd wrappers
+    repro.data    — graph synthesis, batching/padding, partitioning
+    repro.models  — GNN/MoE/LM model zoo
+    repro.serve   — GNN inference serving engine
+"""
+from repro.core.config_space import KernelConfig
+from repro.core.mp import choose_order, mp, mp_transform, mp_typed
+from repro.core.ops import (
+    gather,
+    grouped_segment_matmul,
+    index_segment_reduce,
+    index_weight_segment_reduce,
+    sddmm,
+    segment_matmul,
+    segment_reduce,
+    segment_softmax,
+)
+from repro.core.plan import (
+    RelationPlan,
+    SegmentPlan,
+    make_graph_plan,
+    make_plan,
+    make_relation_plan,
+)
+from repro.data.graphs import (
+    Graph,
+    TypedGraph,
+    batch_graphs,
+    dataset,
+    pad_graph,
+    synth_graph,
+    synth_typed_graph,
+)
+from repro.models.gnn import MODELS, TYPED_MODELS
+from repro.models.gnn import forward as gnn_forward
+from repro.models.gnn import init as gnn_init
+from repro.serve import GNNServer
+
+__all__ = [
+    # graphs
+    "Graph", "TypedGraph", "synth_graph", "synth_typed_graph", "dataset",
+    "batch_graphs", "pad_graph",
+    # plans + config
+    "SegmentPlan", "RelationPlan", "make_plan", "make_graph_plan",
+    "make_relation_plan", "KernelConfig",
+    # segment-reduction op family
+    "segment_reduce", "index_segment_reduce", "index_weight_segment_reduce",
+    "segment_softmax", "segment_matmul", "grouped_segment_matmul", "sddmm",
+    "gather",
+    # message passing
+    "mp", "mp_transform", "mp_typed", "choose_order",
+    # models + serving
+    "MODELS", "TYPED_MODELS", "gnn_init", "gnn_forward", "GNNServer",
+]

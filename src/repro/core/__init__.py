@@ -2,20 +2,23 @@
 
 Public API (paper §II-B, §IV):
     segment_reduce, index_segment_reduce, index_weight_segment_reduce,
-    segment_softmax, segment_matmul, sddmm, gather
+    segment_softmax, segment_matmul, grouped_segment_matmul, sddmm, gather
 """
 from repro.core.autotune import PerfDB, TuneResult, tune
 from repro.core.config_space import KernelConfig, all_configs, default_config
 from repro.core.features import InputFeatures, extract_features
 from repro.core.heuristics import hand_crafted_config, select_config
 from repro.core.plan import (
+    RelationPlan,
     SegmentPlan,
     SegmentStats,
     make_graph_plan,
     make_plan,
+    make_relation_plan,
 )
 from repro.core.ops import (
     gather,
+    grouped_segment_matmul,
     index_segment_reduce,
     index_weight_segment_reduce,
     sddmm,
@@ -23,15 +26,17 @@ from repro.core.ops import (
     segment_reduce,
     segment_softmax,
 )
-from repro.core.mp import choose_order, mp, mp_transform
+from repro.core.mp import choose_order, mp, mp_transform, mp_typed
 
 __all__ = [
-    "mp", "mp_transform", "choose_order",
+    "mp", "mp_transform", "mp_typed", "choose_order",
     "KernelConfig", "all_configs", "default_config",
     "InputFeatures", "extract_features",
     "select_config", "hand_crafted_config",
     "PerfDB", "TuneResult", "tune",
     "SegmentPlan", "SegmentStats", "make_plan", "make_graph_plan",
+    "RelationPlan", "make_relation_plan",
     "segment_reduce", "index_segment_reduce", "index_weight_segment_reduce",
-    "segment_softmax", "segment_matmul", "sddmm", "gather",
+    "segment_softmax", "segment_matmul", "grouped_segment_matmul", "sddmm",
+    "gather",
 ]

@@ -265,6 +265,30 @@ def _runner_sddmm(idx_size, num_segments, feat, interpret, seed):
     return run
 
 
+def _runner_grouped_segment_matmul(idx_size, num_segments, feat, interpret,
+                                   seed):
+    """The typed-edge profile of the grouped GEMM: zipf-skewed group sizes
+    (most relations tiny, a few dominant — empty groups included), unlike
+    :func:`_runner_segment_matmul`'s balanced MoE split. Same kernel,
+    separately keyed PerfDB entries."""
+    import jax.numpy as jnp
+
+    from repro.kernels import ops as kops
+    rng = np.random.default_rng(seed)
+    e = max(num_segments, 1)
+    w_rel = np.minimum(rng.zipf(1.2, size=e).astype(np.float64),
+                       max(idx_size / 2.0, 1.0))
+    sizes = rng.multinomial(idx_size, w_rel / w_rel.sum()).astype(np.int32)
+    x = jnp.asarray(rng.standard_normal((idx_size, feat)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((e, feat, feat)).astype(np.float32))
+    gs = jnp.asarray(sizes)
+
+    def run(cfg: KernelConfig):
+        return lambda: kops.segment_matmul(x, gs, w, config=cfg,
+                                           interpret=interpret)
+    return run
+
+
 _OPS: Dict[str, Callable] = {
     "segment_reduce": _runner_segment_reduce,
     "gather_segment_reduce": _runner_gather_segment_reduce,
@@ -274,12 +298,13 @@ _OPS: Dict[str, Callable] = {
         _runner_gather_segment_reduce, reduce="max"),
     "segment_softmax": _runner_segment_softmax,
     "segment_matmul": _runner_segment_matmul,
+    "grouped_segment_matmul": _runner_grouped_segment_matmul,
     "sddmm": _runner_sddmm,
 }
 
 # ops that consume only a projection of the config sweep the projected space
 # (deduped), not the full lattice
-_PROJECTED_OPS = ("segment_matmul", "sddmm")
+_PROJECTED_OPS = ("segment_matmul", "grouped_segment_matmul", "sddmm")
 
 
 def config_projection(op: str, cfg: KernelConfig) -> Tuple:

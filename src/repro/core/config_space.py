@@ -60,6 +60,7 @@ OP_KEYS = (
     "gather_segment_reduce_max",
     "segment_softmax",
     "segment_matmul",
+    "grouped_segment_matmul",
     "sddmm",
 )
 

@@ -37,7 +37,7 @@ import jax.numpy as jnp
 from repro.core import ops as geot
 from repro.core.config_space import KernelConfig
 
-__all__ = ["mp", "mp_transform", "choose_order", "resolve_order"]
+__all__ = ["mp", "mp_transform", "mp_typed", "choose_order", "resolve_order"]
 
 _LINEAR_REDUCES = ("sum", "mean")
 
@@ -87,6 +87,66 @@ def mp(x, edge_index, num_nodes: int, *, reduce: str = "sum",
         # empty neighbourhoods come back as the segment_max identity -inf;
         # models want 0 there. Replace exactly -inf (not every non-finite
         # value) so legitimate +inf/NaN aggregates still surface downstream.
+        y = jnp.where(y == -jnp.inf, jnp.zeros_like(y), y)
+    return y
+
+
+def mp_typed(x, w, edge_index, edge_type, num_nodes: int, *,
+             type_perm=None, inv_type_perm=None, type_counts=None,
+             reduce: str = "sum", edge_weight=None, plan=None, rplan=None,
+             impl: str = "ref", config: Optional[KernelConfig] = None,
+             tune: Optional[bool] = None):
+    """Heterogeneous message passing — per-relation weight transforms as
+    **one** grouped ``segment_matmul`` launch (FASTEN's critical operator),
+    composed with the existing fused gather-reduce kernels:
+
+        Y[d] = reduce_{(s,d,r) ∈ E} (w_e ·) X[s] @ W[r]
+
+    ``edge_index``: (2, E) destination-sorted (the layout every plan-aware
+    reduce requires); ``edge_type``: (E,) relation id per edge, aligned
+    with the dst-sorted edges; ``w``: (R, d_in, d_out) one transform per
+    relation.
+
+    The two layouts are reconciled with one precomputed permutation: a
+    *stable* argsort of ``edge_type`` yields (type, dst)-sorted rows — the
+    contiguous groups the grouped matmul needs — and its inverse is fused
+    into the reduce's gather operand, so the un-permute costs no extra
+    launch. Per layer: one grouped matmul + one fused gather-reduce.
+
+    ``type_perm`` / ``inv_type_perm`` / ``type_counts``: the permutation
+    triple, precomputed by :class:`repro.data.graphs.TypedGraph` (derived
+    here from ``edge_type`` when omitted). ``plan``: SegmentPlan over the
+    destinations; ``rplan``: :class:`repro.core.plan.RelationPlan` over
+    the type segments (feeds the grouped kernel's scalar-prefetch
+    metadata). ``(plan/rplan, config, tune)`` follow the precedence rule
+    of ``docs/plans.md``."""
+    if reduce not in ("sum", "mean", "max"):
+        raise ValueError(f"unknown reduce: {reduce!r}")
+    src, dst = edge_index[0], edge_index[1]
+    num_types = int(w.shape[0])
+    if type_perm is None:
+        type_perm = jnp.argsort(edge_type, stable=True)
+    if type_counts is None:
+        type_counts = jnp.bincount(edge_type, length=num_types)
+    if inv_type_perm is None:
+        inv_type_perm = (jnp.zeros_like(type_perm)
+                         .at[type_perm]
+                         .set(jnp.arange(type_perm.shape[0],
+                                         dtype=type_perm.dtype)))
+    # gather sources in (type, dst) order → grouped transform (ONE launch)
+    msg = geot.gather(x, jnp.take(src, type_perm))
+    msg = geot.grouped_segment_matmul(msg, type_counts, w, impl, None,
+                                      rplan, tune)
+    # fused un-permute + aggregate: the reduce's gather operand IS the
+    # inverse permutation, so rows come back in dst order for free
+    if edge_weight is None:
+        y = geot.index_segment_reduce(msg, inv_type_perm, dst, num_nodes,
+                                      reduce, impl, config, plan, tune)
+    else:
+        y = geot.index_weight_segment_reduce(msg, inv_type_perm, edge_weight,
+                                             dst, num_nodes, reduce, impl,
+                                             config, plan, tune)
+    if reduce == "max":
         y = jnp.where(y == -jnp.inf, jnp.zeros_like(y), y)
     return y
 

@@ -36,6 +36,7 @@ __all__ = [
     "index_weight_segment_reduce",
     "segment_softmax",
     "segment_matmul",
+    "grouped_segment_matmul",
     "sddmm",
     "gather",
 ]
@@ -157,7 +158,7 @@ def _account_unfused(op: str) -> None:
 
 
 def _dispatch_segment_reduce(x, idx, num_segments, reduce, impl, config,
-                             plan=None, account=True):
+                             plan=None, account=True, tune=None):
     # ``account=False``: the public index_* ops already recorded this
     # aggregation — don't double-count the inner dispatch
     if impl == "ref":
@@ -168,37 +169,42 @@ def _dispatch_segment_reduce(x, idx, num_segments, reduce, impl, config,
         if account:
             _account_unfused(f"segment_reduce_{reduce}:blocked")
         cfg = (config or (plan.config if plan is not None else None)
-               or _auto_config(idx, num_segments, x.shape[-1]))
+               or _auto_config(idx, num_segments, x.shape[-1], tune=tune))
         return _segment_reduce_blocked(x, idx, num_segments, reduce, cfg)
     if impl == "pallas":
         from repro.kernels import ops as kops
         return kops.segment_reduce(x, idx, num_segments, reduce=reduce,
-                                   config=config, plan=plan)
+                                   config=config, plan=plan, tune=tune)
     raise ValueError(f"unknown impl: {impl}")
 
 
-def _auto_config(idx, num_segments, feat) -> KernelConfig:
+def _auto_config(idx, num_segments, feat, op: str = "segment_reduce",
+                 tune=None) -> KernelConfig:
     from repro.core.heuristics import select_config
-    return select_config(int(idx.shape[0]), int(num_segments), int(feat))
+    return select_config(int(idx.shape[0]), int(num_segments), int(feat),
+                         op=op, tune=tune)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 7))
 def segment_reduce(x, idx, num_segments: int, reduce: str = "sum",
                    impl: str = "ref", config: Optional[KernelConfig] = None,
-                   plan=None):
+                   plan=None, tune: Optional[bool] = None):
     """Y[s, :] = reduce_{i : idx[i] == s} X[i, :]   (paper Fig. 2).
 
     idx must be sorted non-decreasing. Differentiable (sum/mean/max).
     ``plan``: precomputed :class:`repro.core.plan.SegmentPlan` over ``idx``;
     supplies the config and, for ``impl="pallas"``, the chunk metadata and a
-    tight grid bound (built once per graph, reused across calls)."""
+    tight grid bound (built once per graph, reused across calls).
+    ``(plan=, config=, tune=)`` follow the one precedence rule of
+    ``docs/plans.md``: plan > config > tune > heuristics."""
     return _dispatch_segment_reduce(x, idx, num_segments, reduce, impl,
-                                    config, plan)
+                                    config, plan, tune=tune)
 
 
-def _segment_reduce_fwd(x, idx, num_segments, reduce, impl, config, plan=None):
+def _segment_reduce_fwd(x, idx, num_segments, reduce, impl, config, plan=None,
+                        tune=None):
     y = _dispatch_segment_reduce(x, idx, num_segments, reduce, impl, config,
-                                 plan)
+                                 plan, tune=tune)
     if reduce == "max":
         res = (idx, x, y)
     elif reduce == "mean":
@@ -230,7 +236,7 @@ def _split_ties(y_bar, winner, idx, num_segments):
     return y_bar / jnp.maximum(nwin, 1.0)
 
 
-def _segment_reduce_bwd(num_segments, reduce, impl, config, res, y_bar):
+def _segment_reduce_bwd(num_segments, reduce, impl, config, tune, res, y_bar):
     if reduce == "sum":
         (idx,) = res
         return (_take0(y_bar, idx), None, None)
@@ -274,10 +280,11 @@ def _gather_bwd(res, g):
 _gather.defvjp(_gather_fwd, _gather_bwd)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 8))
 def index_segment_reduce(h, gather_idx, seg_idx, num_segments: int,
                          reduce: str = "sum", impl: str = "ref",
-                         config: Optional[KernelConfig] = None, plan=None):
+                         config: Optional[KernelConfig] = None, plan=None,
+                         tune: Optional[bool] = None):
     """Fused message+aggregate (paper Listing 2, §IV):
 
         Y[s] = reduce_{i: seg_idx[i]==s} H[gather_idx[i]]
@@ -292,22 +299,22 @@ def index_segment_reduce(h, gather_idx, seg_idx, num_segments: int,
         from repro.kernels import ops as kops
         return kops.gather_segment_reduce(h, gather_idx, seg_idx,
                                           num_segments, reduce=reduce,
-                                          config=config, plan=plan)
+                                          config=config, plan=plan, tune=tune)
     _account_unfused(f"index_segment_reduce_{reduce}:{impl}")
     msg = jnp.take(h, gather_idx, axis=0)
     return _dispatch_segment_reduce(msg, seg_idx, num_segments, reduce,
                                     "ref" if impl == "ref" else impl, config,
-                                    plan, account=False)
+                                    plan, account=False, tune=tune)
 
 
 def _isr_fwd(h, gather_idx, seg_idx, num_segments, reduce, impl, config,
-             plan=None):
+             plan=None, tune=None):
     y = index_segment_reduce(h, gather_idx, seg_idx, num_segments, reduce,
-                             impl, config, plan)
+                             impl, config, plan, tune)
     return y, (h, gather_idx, seg_idx, y)
 
 
-def _isr_bwd(num_segments, reduce, impl, config, res, y_bar):
+def _isr_bwd(num_segments, reduce, impl, config, tune, res, y_bar):
     h, gather_idx, seg_idx, y = res
     if reduce == "sum":
         g_edges = _take0(y_bar, seg_idx)
@@ -327,12 +334,12 @@ def _isr_bwd(num_segments, reduce, impl, config, res, y_bar):
 index_segment_reduce.defvjp(_isr_fwd, _isr_bwd)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 9))
 def index_weight_segment_reduce(h, gather_idx, weight, seg_idx,
                                 num_segments: int, reduce: str = "sum",
                                 impl: str = "ref",
                                 config: Optional[KernelConfig] = None,
-                                plan=None):
+                                plan=None, tune: Optional[bool] = None):
     """Weighted fused message+aggregate (paper §IV):
 
         Y[s] = reduce_{i: seg_idx[i]==s} w[i] * H[gather_idx[i]]
@@ -346,25 +353,26 @@ def index_weight_segment_reduce(h, gather_idx, weight, seg_idx,
         from repro.kernels import ops as kops
         return kops.gather_segment_reduce(h, gather_idx, seg_idx, num_segments,
                                           weight=weight, reduce=reduce,
-                                          config=config, plan=plan)
+                                          config=config, plan=plan, tune=tune)
     _account_unfused(f"index_weight_segment_reduce_{reduce}:{impl}")
     msg = jnp.take(h, gather_idx, axis=0) * weight[:, None].astype(h.dtype)
     return _dispatch_segment_reduce(msg, seg_idx, num_segments, reduce,
                                     "ref" if impl == "ref" else impl, config,
-                                    plan, account=False)
+                                    plan, account=False, tune=tune)
 
 
 def _iwsr_fwd(h, gather_idx, weight, seg_idx, num_segments, reduce, impl,
-              config, plan=None):
+              config, plan=None, tune=None):
     y = index_weight_segment_reduce(h, gather_idx, weight, seg_idx,
-                                    num_segments, reduce, impl, config, plan)
+                                    num_segments, reduce, impl, config, plan,
+                                    tune)
     # only max's winner mask reads y back — don't pin an (S, N) residual
     # through the backward pass of the common sum/mean paths
     return y, (h, gather_idx, weight, seg_idx,
                y if reduce == "max" else None)
 
 
-def _iwsr_bwd(num_segments, reduce, impl, config, res, y_bar):
+def _iwsr_bwd(num_segments, reduce, impl, config, tune, res, y_bar):
     h, gather_idx, weight, seg_idx, y = res
     # d(msg) with msg[i] = w[i]·H[g[i]]: per-reduce cotangent routed to edges
     if reduce == "sum":
@@ -399,11 +407,42 @@ def _iwsr_bwd(num_segments, reduce, impl, config, res, y_bar):
 index_weight_segment_reduce.defvjp(_iwsr_fwd, _iwsr_bwd)
 
 
-def sddmm(h_out, h_in, row_idx, col_idx):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 7))
+def sddmm(h_out, h_in, row_idx, col_idx, impl: str = "ref",
+          config: Optional[KernelConfig] = None, plan=None,
+          tune: Optional[bool] = None):
     """Sampled dense-dense matmul: per-edge dot products (paper §VI).
-    out[i] = <h_out[row_idx[i]], h_in[col_idx[i]]>."""
+    out[i] = <h_out[row_idx[i]], h_in[col_idx[i]]>.
+
+    ``impl="pallas"`` runs the blocked gather kernel; the ``(plan=,
+    config=, tune=)`` trio follows the one precedence rule of
+    ``docs/plans.md`` (a SegmentPlan contributes only its config — SDDMM
+    is a pure gather and reads no chunk metadata)."""
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        return kops.sddmm(h_out, h_in, row_idx, col_idx, config=config,
+                          plan=plan, tune=tune)
     return jnp.sum(jnp.take(h_out, row_idx, axis=0) *
                    jnp.take(h_in, col_idx, axis=0), axis=-1)
+
+
+def _sddmm_fwd(h_out, h_in, row_idx, col_idx, impl, config, plan=None,
+               tune=None):
+    y = sddmm(h_out, h_in, row_idx, col_idx, impl, config, plan, tune)
+    return y, (h_out, h_in, row_idx, col_idx)
+
+
+def _sddmm_bwd(impl, config, tune, res, g):
+    h_out, h_in, row_idx, col_idx = res
+    # d<a_r, b_c>/da_r = g·b_c and symmetrically for b: two scatter-adds
+    da = jnp.zeros_like(h_out).at[row_idx].add(
+        g[:, None].astype(h_out.dtype) * jnp.take(h_in, col_idx, axis=0))
+    db = jnp.zeros_like(h_in).at[col_idx].add(
+        g[:, None].astype(h_in.dtype) * jnp.take(h_out, row_idx, axis=0))
+    return (da, db, None, None, None)
+
+
+sddmm.defvjp(_sddmm_fwd, _sddmm_bwd)
 
 
 def _segment_softmax_ref(x, idx, num_segments: int):
@@ -415,9 +454,10 @@ def _segment_softmax_ref(x, idx, num_segments: int):
     return e / jnp.take(jnp.maximum(z, 1e-20), idx, axis=0)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 6))
 def segment_softmax(x, idx, num_segments: int, impl: str = "ref",
-                    config: Optional[KernelConfig] = None, plan=None):
+                    config: Optional[KernelConfig] = None, plan=None,
+                    tune: Optional[bool] = None):
     """Softmax within segments (GAT-style attention over sorted edges).
 
     ``x``: (M,) or (M, H) logits — heads share the segment structure.
@@ -428,17 +468,17 @@ def segment_softmax(x, idx, num_segments: int, impl: str = "ref",
     if impl == "pallas":
         from repro.kernels import ops as kops
         return kops.segment_softmax(x, idx, num_segments, config=config,
-                                    plan=plan)
+                                    plan=plan, tune=tune)
     _account_unfused(f"segment_softmax:{impl}")
     return _segment_softmax_ref(x, idx, num_segments)
 
 
-def _ssm_fwd(x, idx, num_segments, impl, config, plan=None):
-    p = segment_softmax(x, idx, num_segments, impl, config, plan)
+def _ssm_fwd(x, idx, num_segments, impl, config, plan=None, tune=None):
+    p = segment_softmax(x, idx, num_segments, impl, config, plan, tune)
     return p, (p, idx)
 
 
-def _ssm_bwd(num_segments, impl, config, res, g):
+def _ssm_bwd(num_segments, impl, config, tune, res, g):
     p, idx = res
     # d softmax: p ⊙ (g − Σ_{segment} p·g), the per-segment Jacobian action
     t = jax.ops.segment_sum(p * g, idx, num_segments, indices_are_sorted=True)
@@ -448,17 +488,79 @@ def _ssm_bwd(num_segments, impl, config, res, g):
 segment_softmax.defvjp(_ssm_fwd, _ssm_bwd)
 
 
-def segment_matmul(x, group_sizes, w, impl: str = "ref",
-                   config: Optional[KernelConfig] = None, plan=None):
-    """Grouped GEMM over contiguous segments (GeoT-extension; the MoE expert
-    hot path):  out[rows of segment e] = X[rows of segment e] @ W[e].
-
-    x: (M, K) sorted so rows of the same group are contiguous;
-    group_sizes: (E,) int32 rows per group (sum == M); w: (E, K, N).
-    ``plan``: accepted for API symmetry with the reduction ops — only its
-    selected config is consumed (tiling), never its chunk metadata."""
+def _gsm_dispatch(x, group_sizes, w, impl, config, plan, tune):
     if impl == "pallas":
         from repro.kernels import ops as kops
         return kops.segment_matmul(x, group_sizes, w, config=config,
-                                   plan=plan)
+                                   plan=plan, tune=tune)
+    _account_unfused(f"grouped_segment_matmul:{impl}")
     return jax.lax.ragged_dot(x, w, group_sizes)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 6))
+def grouped_segment_matmul(x, group_sizes, w, impl: str = "ref",
+                           config: Optional[KernelConfig] = None, plan=None,
+                           tune: Optional[bool] = None):
+    """Grouped GEMM over contiguous row groups (FASTEN's critical
+    heterogeneous-GNN operator; also the MoE expert hot path):
+
+        out[rows of group e] = X[rows of group e] @ W[e]
+
+    x: (M, K) sorted so rows of the same group are contiguous;
+    group_sizes: (E,) int32 rows per group (sum ≤ M); w: (E, K, N).
+    Rows beyond ``sum(group_sizes)`` (padding) produce zeros and receive
+    zero gradient — the out-of-range drop convention every reduce's
+    backward follows (:func:`_take0`).
+
+    ``plan``: a :class:`repro.core.plan.RelationPlan` — for
+    ``impl="pallas"`` its precomputed block/group metadata feeds the
+    kernel's scalar-prefetch operands and its tight ``max_groups`` bounds
+    the grid. Differentiable in x and w with a custom VJP:
+
+        dX = grouped_segment_matmul(dY, sizes, Wᵀ)   (one grouped launch)
+        dW[e] = X[rows e]ᵀ @ dY[rows e]              (segment-summed outer)
+    """
+    return _gsm_dispatch(x, group_sizes, w, impl, config, plan, tune)
+
+
+def _gsm_fwd(x, group_sizes, w, impl, config, plan=None, tune=None):
+    y = _gsm_dispatch(x, group_sizes, w, impl, config, plan, tune)
+    return y, (x, group_sizes, w, plan)
+
+
+def _gsm_bwd(impl, config, tune, res, y_bar):
+    x, group_sizes, w, plan = res
+    y_bar = y_bar.astype(x.dtype)
+    # dX: the transposed grouped matmul reuses the plan — its block/group
+    # metadata depends only on (group_sizes, num_rows, m_b), all unchanged;
+    # the kernel re-clamps n_b to the transposed feature dim.
+    dx = _gsm_dispatch(y_bar, group_sizes, w.transpose(0, 2, 1), impl,
+                       config, plan, tune)
+    # dW: per-group Xᵀ dY as a segment-sum of row outer products. Rows past
+    # sum(group_sizes) are clipped into the last group but masked to zero —
+    # out-of-range rows contribute no gradient.
+    m = x.shape[0]
+    e = group_sizes.shape[0]
+    offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                               jnp.cumsum(group_sizes.astype(jnp.int32))])
+    rows = jnp.arange(m, dtype=jnp.int32)
+    gid = jnp.clip(jnp.searchsorted(offsets, rows, side="right") - 1,
+                   0, e - 1)
+    valid = (rows < offsets[-1]).astype(x.dtype)
+    outer = ((x * valid[:, None])[:, :, None] *
+             y_bar[:, None, :]).reshape(m, x.shape[1] * y_bar.shape[1])
+    dw = jax.ops.segment_sum(outer, gid, e, indices_are_sorted=True)
+    return (dx, None, dw.reshape(w.shape).astype(w.dtype), None)
+
+
+grouped_segment_matmul.defvjp(_gsm_fwd, _gsm_bwd)
+
+
+def segment_matmul(x, group_sizes, w, impl: str = "ref",
+                   config: Optional[KernelConfig] = None, plan=None,
+                   tune: Optional[bool] = None):
+    """Grouped GEMM over contiguous segments — alias of
+    :func:`grouped_segment_matmul` kept for the original MoE call sites
+    (identical semantics, VJP, and kwarg trio)."""
+    return grouped_segment_matmul(x, group_sizes, w, impl, config, plan,
+                                  tune)

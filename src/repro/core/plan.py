@@ -37,8 +37,9 @@ import numpy as np
 
 from repro.core.config_space import KernelConfig
 
-__all__ = ["SegmentStats", "SegmentPlan", "PartitionedPlan", "make_plan",
-           "make_graph_plan", "make_partitioned_plan"]
+__all__ = ["SegmentStats", "SegmentPlan", "PartitionedPlan", "RelationPlan",
+           "make_plan", "make_graph_plan", "make_partitioned_plan",
+           "make_relation_plan"]
 
 
 def _round_up(x: int, m: int) -> int:
@@ -271,6 +272,112 @@ def make_partitioned_plan(pg, feat: int = 128,
         num_rows=int(pg.edges_per_shard),
         num_segments=v,
         max_chunks=max_chunks,
+        config=config,
+        stats=stats,
+    )
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class RelationPlan:
+    """Precomputed schedule for one grouped-matmul instance (the typed-edge
+    analogue of :class:`SegmentPlan`): which relation groups each M_b row
+    block of the grouped ``segment_matmul`` grid overlaps, evaluated once
+    per typed graph on the host instead of per call at trace time.
+
+    Leaves: ``offsets`` (R+1,), ``first_group`` / ``group_count``
+    (int32, (m_blocks,)) — the scalar-prefetch operands of
+    :func:`repro.kernels.segment_matmul.segment_matmul_pallas`.
+    Aux (static): sizes, the tight ``max_groups`` (max groups any row block
+    actually overlaps — the plan-less kernel must assume ``min(R, M_b+1)``),
+    the selected ``config``, and :class:`SegmentStats` over the relation
+    sizes (skew of the type histogram drives diagnostics and autotuning
+    features exactly as degree skew does for the reduces).
+    """
+    offsets: jax.Array       # (num_groups + 1,) int32 row offsets
+    first_group: jax.Array   # (m_blocks,) int32
+    group_count: jax.Array   # (m_blocks,) int32
+    num_rows: int            # M: rows of X the metadata was built for
+    num_groups: int          # R: relation count
+    max_groups: int          # tight: max(group_count), >= 1
+    config: KernelConfig
+    stats: SegmentStats      # over the relation-size histogram
+
+    def tree_flatten(self):
+        children = (self.offsets, self.first_group, self.group_count)
+        aux = (self.num_rows, self.num_groups, self.max_groups,
+               self.config, self.stats)
+        return children, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+    @property
+    def worst_case_groups(self) -> int:
+        """The group-grid bound the plan-less kernel must assume."""
+        return min(self.num_groups, self.config.m_b + 1)
+
+    @property
+    def grid_savings(self) -> float:
+        """worst-case / tight group-dim ratio (>= 1)."""
+        return self.worst_case_groups / max(self.max_groups, 1)
+
+    def validate(self, num_rows: int, num_groups: int) -> None:
+        """Trace-time consistency check against the arrays of an op call."""
+        if num_rows != self.num_rows or num_groups != self.num_groups:
+            raise ValueError(
+                f"RelationPlan built for (M={self.num_rows}, "
+                f"R={self.num_groups}) used with (M={num_rows}, "
+                f"R={num_groups}); rebuild the plan for this typed graph.")
+
+
+def make_relation_plan(group_sizes, num_rows: Optional[int] = None,
+                       feat: int = 128,
+                       config: Optional[KernelConfig] = None,
+                       tune: Optional[bool] = None) -> RelationPlan:
+    """Build a :class:`RelationPlan` from *concrete* per-relation row counts.
+
+    ``group_sizes`` (R,) must be host-available (numpy or committed jax
+    array) with non-negative entries; ``num_rows`` defaults to their sum
+    (pass the padded row count when X carries trailing out-of-range rows —
+    they belong to no group and the metadata drops them, the same
+    convention as :func:`make_plan`'s row padding). ``feat`` is the
+    representative output width N fed to the config heuristic. ``tune``
+    follows the :func:`make_plan` semantics (measured sweep via the
+    PerfDB; ``None`` defers to ``REPRO_AUTOTUNE``)."""
+    sizes = np.asarray(group_sizes).astype(np.int64)
+    if sizes.ndim != 1 or sizes.size == 0:
+        raise ValueError(
+            f"group_sizes must be 1-D and non-empty, got shape {sizes.shape}")
+    if np.any(sizes < 0):
+        raise ValueError("group_sizes must be non-negative")
+    total = int(sizes.sum())
+    m = total if num_rows is None else int(num_rows)
+    if m < total:
+        raise ValueError(f"num_rows={m} < sum(group_sizes)={total}")
+    # the relation-size histogram is a degenerate sorted segment index:
+    # reuse the same statistics machinery as the reduces
+    stats = segment_stats(np.repeat(np.arange(sizes.size), sizes), sizes.size)
+
+    if config is None:
+        from repro.core.heuristics import select_config
+        config = select_config(max(m, 1), max(int(sizes.size), 1), feat,
+                               op="grouped_segment_matmul", tune=tune)
+
+    # the kernel's own metadata helper, evaluated concretely on the host —
+    # one formula, so plans can never drift from the per-call path
+    from repro.kernels.segment_matmul import group_metadata
+    offsets, fg, gc = group_metadata(sizes.astype(np.int32), m, config.m_b)
+    gc_np = np.asarray(gc)
+    max_groups = max(1, int(gc_np.max())) if gc_np.size else 1
+    return RelationPlan(
+        offsets=jnp.asarray(offsets),
+        first_group=jnp.asarray(fg),
+        group_count=jnp.asarray(gc),
+        num_rows=m,
+        num_groups=int(sizes.size),
+        max_groups=max_groups,
         config=config,
         stats=stats,
     )

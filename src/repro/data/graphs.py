@@ -78,6 +78,118 @@ class Graph:
         return partition_graph(self, num_shards)
 
 
+@dataclasses.dataclass(frozen=True)
+class TypedGraph(Graph):
+    """A :class:`Graph` whose edges carry relation types (heterogeneous /
+    relational GNNs — RGCN, relational GAT).
+
+    Layout contract: ``edge_index`` stays **destination-sorted** (the plan
+    /kernels' requirement, unchanged from Graph) and ``edge_type`` is
+    aligned with those dst-sorted edges. The grouped ``segment_matmul``
+    instead needs rows contiguous per relation, so construction
+    precomputes the reconciling permutation triple once:
+
+      * ``type_perm`` — stable argsort of ``edge_type``; because it is
+        stable, edges come out in (type, dst) lexicographic order and
+        each relation's rows form one contiguous group;
+      * ``inv_type_perm`` — its inverse, fused into the reduce's gather
+        operand by :func:`repro.core.mp.mp_typed` (the un-permute costs
+        no extra launch);
+      * ``type_counts`` — rows per relation (the grouped matmul's
+        ``group_sizes``; zeros for unused relations are fine).
+
+    Construction validates the layout and round-trips the permutation
+    (``type_perm[inv_type_perm] == arange``), mirroring ``make_plan``'s
+    sortedness checks, so a malformed typed graph fails loudly at build
+    time rather than silently misrouting messages."""
+    edge_type: Optional[np.ndarray] = None       # (E,) int32, dst-aligned
+    num_relations: int = 1
+    type_perm: Optional[np.ndarray] = None       # derived; see __post_init__
+    inv_type_perm: Optional[np.ndarray] = None
+    type_counts: Optional[np.ndarray] = None
+
+    def __post_init__(self):
+        if self.edge_type is None:
+            raise ValueError("TypedGraph requires edge_type")
+        et = np.asarray(self.edge_type, np.int32)
+        if et.shape != (self.num_edges,):
+            raise ValueError(
+                f"edge_type shape {et.shape} != (num_edges={self.num_edges},)")
+        if et.size and (et.min() < 0 or et.max() >= self.num_relations):
+            raise ValueError(
+                f"edge_type ids must lie in [0, {self.num_relations}); "
+                f"got range [{et.min()}, {et.max()}]")
+        if np.any(np.diff(self.edge_index[1]) < 0):
+            raise ValueError("edge_index[1] (destinations) must be sorted "
+                             "non-decreasing")
+        object.__setattr__(self, "edge_type", et)
+        if self.type_perm is None:
+            perm = np.argsort(et, kind="stable").astype(np.int32)
+            inv = np.empty_like(perm)
+            inv[perm] = np.arange(perm.size, dtype=np.int32)
+            counts = np.bincount(et, minlength=self.num_relations)
+            object.__setattr__(self, "type_perm", perm)
+            object.__setattr__(self, "inv_type_perm", inv)
+            object.__setattr__(self, "type_counts",
+                               counts.astype(np.int32))
+        # round-trip validation: the permutation must be a bijection whose
+        # image is type-sorted with the advertised group sizes
+        perm, inv, counts = self.type_perm, self.inv_type_perm, self.type_counts
+        if not np.array_equal(perm[inv], np.arange(perm.size)):
+            raise ValueError("type_perm/inv_type_perm do not round-trip")
+        pt = et[perm]
+        if np.any(np.diff(pt) < 0):
+            raise ValueError("type_perm does not sort edge_type")
+        if int(counts.sum()) != et.size or not np.array_equal(
+                counts, np.bincount(et, minlength=self.num_relations)):
+            raise ValueError("type_counts disagree with edge_type")
+
+    @property
+    def typed_src(self) -> np.ndarray:
+        """Source ids in (type, dst) order — the grouped matmul's gather."""
+        return self.edge_index[0][self.type_perm]
+
+    def make_relation_plan(self, feat: Optional[int] = None, config=None,
+                           tune: Optional[bool] = None):
+        """Precompute the grouped-matmul schedule over the relation
+        segments (memoized like :meth:`make_plan`; keyed separately so the
+        reduce plan and the relation plan coexist in one cache)."""
+        feat = self.x.shape[1] if feat is None else feat
+        key = ("relation", int(feat), config, tune)
+        plan = self._plan_cache.get(key)
+        if plan is None:
+            from repro.core.plan import make_relation_plan
+            plan = make_relation_plan(self.type_counts,
+                                      num_rows=self.num_edges, feat=feat,
+                                      config=config, tune=tune)
+            self._plan_cache[key] = plan
+        return plan
+
+
+def synth_typed_graph(name: str, num_nodes: int, num_edges: int,
+                      num_relations: int = 4, feat: int = 32,
+                      num_classes: int = 16, alpha: float = 1.3,
+                      type_alpha: float = 1.2, seed: int = 0) -> TypedGraph:
+    """A :func:`synth_graph` whose edges additionally carry zipf-skewed
+    relation ids (``type_alpha`` controls the skew; large values leave
+    most relations nearly empty — the imbalance regime the grouped kernel
+    must mask correctly)."""
+    g = synth_graph(name, num_nodes, num_edges, feat=feat,
+                    num_classes=num_classes, alpha=alpha, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    if num_edges > 0:
+        w = np.minimum(rng.zipf(type_alpha, size=num_relations)
+                       .astype(np.float64), max(num_edges / 2.0, 1.0))
+        et = rng.choice(num_relations, size=num_edges,
+                        p=w / w.sum()).astype(np.int32)
+    else:
+        et = np.zeros(0, np.int32)
+    return TypedGraph(
+        name=g.name, edge_index=g.edge_index, num_nodes=g.num_nodes,
+        x=g.x, labels=g.labels, deg_inv_sqrt=g.deg_inv_sqrt,
+        edge_type=et, num_relations=num_relations)
+
+
 def synth_graph(name: str, num_nodes: int, num_edges: int, feat: int = 32,
                 num_classes: int = 16, alpha: float = 1.3,
                 seed: int = 0) -> Graph:

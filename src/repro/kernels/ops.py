@@ -4,14 +4,19 @@ On this CPU-only container the kernels execute with ``interpret=True``
 (Pallas interpreter); on TPU hardware set ``REPRO_PALLAS_INTERPRET=0`` (or
 pass ``interpret=False``) to compile via Mosaic.
 
-Config selection follows one precedence for every op (paper §III-C +
-the measured tier of :mod:`repro.core.autotune`):
+Every wrapper accepts the same ``(plan=, config=, tune=)`` trio with one
+precedence (paper §III-C + the measured tier of :mod:`repro.core.autotune`;
+documented once in ``docs/plans.md``):
 
-    explicit ``config=``  >  ``plan.config``  >  measured PerfDB entry
-    (``REPRO_AUTOTUNE=1``)  >  generated decision-tree rules  >  hand-crafted
+    ``plan``  >  explicit ``config=``  >  measured PerfDB entry
+    (``tune=True`` / ``REPRO_AUTOTUNE=1``)  >  generated decision-tree
+    rules  >  hand-crafted
 
-Resolution happens *here*, outside the jitted pallas_call wrappers, so a
-wall-clock tuning sweep never runs at trace time.
+A plan's schedule metadata is authoritative: an explicit config may refine
+non-tiling dimensions but must agree with the plan's tiling (conflicts
+raise); ``tune`` is only consulted when neither a plan nor a config pins
+the choice. Resolution happens *here*, outside the jitted pallas_call
+wrappers, so a wall-clock tuning sweep never runs at trace time.
 """
 from __future__ import annotations
 
@@ -88,25 +93,28 @@ def fusion_scope():
 
 
 def _resolve_config(config: Optional[KernelConfig], plan, idx_size: int,
-                    num_segments: int, feat: int,
-                    op: str) -> Optional[KernelConfig]:
-    """Apply the selection precedence ahead of the jit boundary.
+                    num_segments: int, feat: int, op: str,
+                    tune: Optional[bool] = None) -> Optional[KernelConfig]:
+    """Apply the selection precedence ahead of the jit boundary
+    (plan > config > tune > heuristics).
 
     Returns None only when a plan carries the config (the kernel merges it
     with the plan's chunk metadata via ``_resolve_plan``)."""
     if config is not None or plan is not None:
         return config
     from repro.core.heuristics import select_config
-    return select_config(int(idx_size), int(num_segments), int(feat), op=op)
+    return select_config(int(idx_size), int(num_segments), int(feat), op=op,
+                         tune=tune)
 
 
 def segment_reduce(x, idx, num_segments: int, reduce: str = "sum",
                    config: Optional[KernelConfig] = None,
                    max_chunks: Optional[int] = None,
-                   interpret: Optional[bool] = None, plan=None):
+                   interpret: Optional[bool] = None, plan=None,
+                   tune: Optional[bool] = None):
     interpret = _default_interpret() if interpret is None else interpret
     config = _resolve_config(config, plan, x.shape[0], num_segments,
-                             x.shape[-1], "segment_reduce")
+                             x.shape[-1], "segment_reduce", tune)
     account("fused", f"segment_reduce_{reduce}")
     if reduce == "mean":
         # the non-gather mean pairs a fused sum launch with a jnp count
@@ -120,7 +128,8 @@ def gather_segment_reduce(h, gather_idx, seg_idx, num_segments: int,
                           weight=None, reduce: str = "sum",
                           config: Optional[KernelConfig] = None,
                           max_chunks: Optional[int] = None,
-                          interpret: Optional[bool] = None, plan=None):
+                          interpret: Optional[bool] = None, plan=None,
+                          tune: Optional[bool] = None):
     """Fused gather + segment reduction, one launch per reduce ∈
     {sum, mean, max} (weighted or not) — the mean's count and the max's
     running maximum live inside the kernel, never as a second launch."""
@@ -131,7 +140,7 @@ def gather_segment_reduce(h, gather_idx, seg_idx, num_segments: int,
     op = ("gather_segment_reduce" if reduce == "sum"
           else f"gather_segment_reduce_{reduce}")
     config = _resolve_config(config, plan, gather_idx.shape[0], num_segments,
-                             h.shape[-1], op)
+                             h.shape[-1], op, tune)
     account("fused", op if weight is None else f"{op}_weighted")
     return gather_segment_reduce_pallas(h, gather_idx, seg_idx, num_segments,
                                         weight=weight, reduce=reduce,
@@ -141,24 +150,49 @@ def gather_segment_reduce(h, gather_idx, seg_idx, num_segments: int,
 
 def segment_matmul(x, group_sizes, w, config: Optional[KernelConfig] = None,
                    max_groups: Optional[int] = None,
-                   interpret: Optional[bool] = None, plan=None):
-    """Grouped GEMM. ``plan=`` is accepted for API symmetry with the
-    reduction ops: only its config is consumed (the chunk metadata of a
-    SegmentPlan describes a segment index, not group offsets)."""
+                   interpret: Optional[bool] = None, plan=None,
+                   tune: Optional[bool] = None):
+    """Grouped GEMM over contiguous row groups — one launch for every
+    relation/expert.
+
+    ``plan=`` accepts a :class:`~repro.core.plan.RelationPlan`: its
+    precomputed ``offsets`` / ``first_group`` / ``group_count`` leaves
+    become the kernel's scalar-prefetch operands (no per-call
+    searchsorted) and its tight ``max_groups`` bounds the grid's group
+    dimension. A :class:`~repro.core.plan.SegmentPlan` is still accepted
+    for backward compatibility (config only — its chunk metadata describes
+    a segment index, not group offsets)."""
     interpret = _default_interpret() if interpret is None else interpret
-    if config is None and plan is not None:
+    meta = {}
+    if plan is not None and hasattr(plan, "first_group"):
+        plan.validate(int(x.shape[0]), int(group_sizes.shape[0]))
+        if config is None:
+            config = plan.config
+        elif (config.m_b, config.n_b) != (plan.config.m_b, plan.config.n_b):
+            raise ValueError(
+                f"explicit config (m_b={config.m_b}, n_b={config.n_b}) "
+                f"conflicts with RelationPlan tiling "
+                f"(m_b={plan.config.m_b}, n_b={plan.config.n_b})")
+        if max_groups is None:
+            max_groups = plan.max_groups
+        meta = dict(offsets=plan.offsets, first_group=plan.first_group,
+                    group_count=plan.group_count)
+    elif config is None and plan is not None:
         config = plan.config
     if config is None:
         from repro.core.heuristics import select_config
         config = select_config(int(x.shape[0]), int(group_sizes.shape[0]),
-                               int(w.shape[-1]), op="segment_matmul")
+                               int(w.shape[-1]), op="segment_matmul",
+                               tune=tune)
+    account("fused", "segment_matmul")
     return segment_matmul_pallas(x, group_sizes, w, m_b=config.m_b,
                                  n_b=config.n_b, max_groups=max_groups,
-                                 interpret=interpret)
+                                 interpret=interpret, **meta)
 
 
 def sddmm(a, b, row_idx, col_idx, config: Optional[KernelConfig] = None,
-          interpret: Optional[bool] = None, plan=None):
+          interpret: Optional[bool] = None, plan=None,
+          tune: Optional[bool] = None):
     """Per-edge dot products. ``plan=`` is accepted for API symmetry with
     the reduction ops: only its selected config is consumed (SDDMM is a
     pure gather — a SegmentPlan's chunk metadata describes a sorted segment
@@ -170,7 +204,7 @@ def sddmm(a, b, row_idx, col_idx, config: Optional[KernelConfig] = None,
     if config is None:
         from repro.core.heuristics import select_config
         config = select_config(int(row_idx.shape[0]), int(a.shape[0]),
-                               int(a.shape[-1]), op="sddmm")
+                               int(a.shape[-1]), op="sddmm", tune=tune)
     return sddmm_pallas(a, b, row_idx, col_idx, m_b=config.m_b,
                         n_b=config.n_b, interpret=interpret)
 
@@ -178,13 +212,14 @@ def sddmm(a, b, row_idx, col_idx, config: Optional[KernelConfig] = None,
 def segment_softmax(x, idx, num_segments: int,
                     config: Optional[KernelConfig] = None,
                     max_chunks: Optional[int] = None,
-                    interpret: Optional[bool] = None, plan=None):
+                    interpret: Optional[bool] = None, plan=None,
+                    tune: Optional[bool] = None):
     """Fused plan-aware softmax within sorted segments ((M,) or (M, H))."""
     from repro.kernels.segment_softmax import segment_softmax_pallas
     interpret = _default_interpret() if interpret is None else interpret
     feat = int(x.shape[-1]) if x.ndim > 1 else 1
     config = _resolve_config(config, plan, idx.shape[0], num_segments, feat,
-                             "segment_softmax")
+                             "segment_softmax", tune)
     account("fused", "segment_softmax")
     return segment_softmax_pallas(x, idx, num_segments, config=config,
                                   max_chunks=max_chunks, interpret=interpret,

@@ -33,7 +33,7 @@ import jax.numpy as jnp
 
 from repro.core import ops as geot
 from repro.core.mp import mp as mp_agg
-from repro.core.mp import mp_transform
+from repro.core.mp import mp_transform, mp_typed
 from repro.models.params import P, dense_init, zeros_init
 
 
@@ -186,32 +186,155 @@ def gat_layer(prm, x, edge_index, num_nodes: int, deg_inv_sqrt=None, *,
 
 
 # ---------------------------------------------------------------------------
+# relation-typed layers (FASTEN direction): per-relation transforms as ONE
+# grouped segment_matmul launch per layer — never a Python loop over types
+# ---------------------------------------------------------------------------
+
+def _require_typed(name, edge_type):
+    if edge_type is None:
+        raise ValueError(f"{name} needs edge_type (a relation-typed graph; "
+                         "see repro.data.graphs.TypedGraph)")
+
+
+def rgcn_layer_init(key, d_in: int, d_out: int, dtype=jnp.float32,
+                    num_relations: int = 4, **_):
+    k1, k2 = jax.random.split(key)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d_in, jnp.float32))
+    return {
+        "w_rel": P(jax.random.normal(k1, (num_relations, d_in, d_out), dtype)
+                   * scale.astype(dtype), ("relation", "embed", "mlp")),
+        "w_self": dense_init(k2, d_in, d_out, ("embed", "mlp"), dtype),
+        "b": zeros_init((d_out,), ("mlp",), dtype),
+    }
+
+
+def rgcn_layer(prm, x, edge_index, num_nodes: int, deg_inv_sqrt=None, *,
+               impl: str = "ref", plan=None, mesh=None, partition=None,
+               edge_type=None, type_perm=None, inv_type_perm=None,
+               type_counts=None, rplan=None):
+    """RGCN: h' = W_self·h + mean_{(s,d,r)} W_r·h_s  (mean over *all*
+    incoming typed messages — the single-normalizer simplification of
+    Schlichtkrull's per-relation 1/c_{i,r}; one grouped matmul + one fused
+    mean reduce per layer instead of R separate SpMMs)."""
+    _require_typed("rgcn_layer", edge_type)
+    if partition is not None:
+        raise NotImplementedError("typed layers are single-shard for now")
+    agg = mp_typed(x, prm["w_rel"].value, edge_index, edge_type, num_nodes,
+                   type_perm=type_perm, inv_type_perm=inv_type_perm,
+                   type_counts=type_counts, reduce="mean", plan=plan,
+                   rplan=rplan, impl=impl)
+    return x @ prm["w_self"].value + agg + prm["b"].value
+
+
+def rgat_layer_init(key, d_in: int, d_out: int, dtype=jnp.float32,
+                    heads: int = 1, num_relations: int = 4, **_):
+    k1, k2, k3 = jax.random.split(key, 3)
+    scale_in = 1.0 / jnp.sqrt(jnp.asarray(d_in, jnp.float32))
+    scale_out = 1.0 / jnp.sqrt(jnp.asarray(d_out, jnp.float32))
+    return {
+        "w_rel": P(jax.random.normal(
+            k1, (num_relations, d_in, heads * d_out), dtype)
+            * scale_in.astype(dtype), ("relation", "embed", "mlp")),
+        "a_src": P(jax.random.normal(k2, (num_relations, heads, d_out), dtype)
+                   * scale_out.astype(dtype), ("relation", "heads", "mlp")),
+        "a_dst": P(jax.random.normal(k3, (num_relations, heads, d_in), dtype)
+                   * scale_in.astype(dtype), ("relation", "heads", "embed")),
+    }
+
+
+def rgat_layer(prm, x, edge_index, num_nodes: int, deg_inv_sqrt=None, *,
+               impl: str = "ref", plan=None, mesh=None, partition=None,
+               edge_type=None, type_perm=None, inv_type_perm=None,
+               type_counts=None, rplan=None):
+    """Relational multi-head GAT (our one-launch variant): attention logits
+
+        e = LeakyReLU( a_src[r]·(W_r h_s)  +  a_dst[r]·h_d )
+
+    score the *transformed* source against the relation's view of the
+    **raw** destination (a_dst acts on h_d directly), so only sources
+    need the per-relation transform — exactly one grouped
+    ``segment_matmul`` launch per layer, like RGCN. Softmax normalizes
+    over each destination's incoming edges (all relations jointly) via
+    the fused multi-head kernel; the α-weighted sums gather the
+    type-ordered messages through the inverse permutation, so no
+    un-permute launch either. Head outputs are averaged."""
+    _require_typed("rgat_layer", edge_type)
+    if partition is not None:
+        raise NotImplementedError("typed layers are single-shard for now")
+    src, dst = edge_index[0], edge_index[1]
+    num_relations, heads, d_out = prm["a_src"].value.shape
+    if type_perm is None:
+        type_perm = jnp.argsort(edge_type, stable=True)
+    if type_counts is None:
+        type_counts = jnp.bincount(edge_type, length=num_relations)
+    if inv_type_perm is None:
+        inv_type_perm = (jnp.zeros_like(type_perm)
+                         .at[type_perm]
+                         .set(jnp.arange(type_perm.shape[0],
+                                         dtype=type_perm.dtype)))
+    et_t = jnp.take(edge_type, type_perm)            # relation per typed row
+    # transformed source messages in (type, dst) order — the ONE grouped
+    # launch of the layer
+    msg = geot.grouped_segment_matmul(
+        geot.gather(x, jnp.take(src, type_perm)), type_counts,
+        prm["w_rel"].value, impl, None, rplan)
+    msg_h = msg.reshape(msg.shape[0], heads, d_out)
+    logit_src = jnp.einsum("ehd,ehd->eh", msg_h,
+                           jnp.take(prm["a_src"].value, et_t, axis=0))
+    logit_dst = jnp.einsum("ek,ehk->eh",
+                           geot.gather(x, jnp.take(dst, type_perm)),
+                           jnp.take(prm["a_dst"].value, et_t, axis=0))
+    e_t = jax.nn.leaky_relu(logit_src + logit_dst, 0.2)     # typed order
+    e = jnp.take(e_t, inv_type_perm, axis=0)                # dst order
+    alpha = geot.segment_softmax(e, dst, num_nodes, impl, None, plan)
+    out = 0.0
+    for i in range(heads):
+        out = out + geot.index_weight_segment_reduce(
+            msg_h[:, i, :], inv_type_perm, alpha[..., i], dst, num_nodes,
+            "sum", impl, None, plan)
+    return out / heads
+
+
+# ---------------------------------------------------------------------------
 # 3-layer models (paper §V-F: node classification, 3 layers, hidden 32/64)
 # ---------------------------------------------------------------------------
 
 _LAYER = {"gcn": (gcn_layer_init, gcn_layer),
           "gin": (gin_layer_init, gin_layer),
           "sage": (sage_layer_init, sage_layer),
-          "gat": (gat_layer_init, gat_layer)}
+          "gat": (gat_layer_init, gat_layer),
+          "rgcn": (rgcn_layer_init, rgcn_layer),
+          "rgat": (rgat_layer_init, rgat_layer)}
 
-MODELS = tuple(_LAYER)
+# the homogeneous families every graph supports (the serve engine's model
+# space); relation-typed families need a TypedGraph and are listed apart
+MODELS = ("gcn", "gin", "sage", "gat")
+TYPED_MODELS = ("rgcn", "rgat")
 
 
 def init(key, model: str, d_in: int, hidden: int, num_classes: int,
-         num_layers: int = 3, dtype=jnp.float32, heads: int = 1):
-    """``heads`` > 1 builds multi-head attention layers (GAT only; the other
-    families ignore it — head outputs are averaged so widths are unchanged)."""
+         num_layers: int = 3, dtype=jnp.float32, heads: int = 1,
+         num_relations: int = 4):
+    """``heads`` > 1 builds multi-head attention layers (GAT/RGAT only);
+    ``num_relations`` sizes the per-relation transforms of the typed
+    families (ignored elsewhere)."""
     init_fn, _ = _LAYER[model]
     dims = [d_in] + [hidden] * (num_layers - 1) + [num_classes]
     ks = jax.random.split(key, num_layers)
-    kwargs = {"heads": heads} if model == "gat" else {}
+    kwargs = {}
+    if model in ("gat", "rgat"):
+        kwargs["heads"] = heads
+    if model in TYPED_MODELS:
+        kwargs["num_relations"] = num_relations
     return [init_fn(k, dims[i], dims[i + 1], dtype, **kwargs)
             for i, k in enumerate(ks)]
 
 
 def forward(params, model: str, x, edge_index, num_nodes: int,
             deg_inv_sqrt: Optional[jax.Array] = None, impl: str = "ref",
-            plan=None, *, mesh=None, partition=None):
+            plan=None, *, mesh=None, partition=None, edge_type=None,
+            type_perm=None, inv_type_perm=None, type_counts=None,
+            rplan=None):
     """``plan``: one :class:`~repro.core.plan.SegmentPlan` built on this
     graph's destinations — reused by every layer (and, via the custom VJPs,
     by the backward pass). One uniform layer call for every family — no
@@ -221,14 +344,25 @@ def forward(params, model: str, x, edge_index, num_nodes: int,
     mesh (``plan`` then being the matching
     :class:`~repro.core.plan.PartitionedPlan`; both are built on demand
     when omitted). The result stays the replicated global (V, C) logits —
-    sharding is an execution detail, not an API change."""
+    sharding is an execution detail, not an API change.
+
+    Typed families (``rgcn``/``rgat``) additionally take ``edge_type``
+    (+ the optional precomputed permutation triple of a
+    :class:`~repro.data.graphs.TypedGraph` and a ``rplan``
+    :class:`~repro.core.plan.RelationPlan`)."""
     if partition is not None and plan is None:
         plan = partition.make_plan(feat=int(x.shape[-1]))
     _, layer_fn = _LAYER[model]
+    typed_kw = {}
+    if model in TYPED_MODELS:
+        typed_kw = dict(edge_type=edge_type, type_perm=type_perm,
+                        inv_type_perm=inv_type_perm,
+                        type_counts=type_counts, rplan=rplan)
     h = x
     for i, prm in enumerate(params):
         h = layer_fn(prm, h, edge_index, num_nodes, deg_inv_sqrt,
-                     impl=impl, plan=plan, mesh=mesh, partition=partition)
+                     impl=impl, plan=plan, mesh=mesh, partition=partition,
+                     **typed_kw)
         if i < len(params) - 1:
             h = jax.nn.relu(h)
     return h

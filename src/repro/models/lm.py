@@ -353,7 +353,7 @@ def decode_step(prm, cfg: ModelConfig, tokens, state: DecodeState,
     """tokens: (B, 1) int32 → (logits (B, 1, V), new DecodeState).
 
     lengths: optional (B,) per-slot cache lengths (continuous batching —
-    repro.serving.scheduler); default: the shared state.length counter."""
+    repro.serve.lm); default: the shared state.length counter."""
     from repro.distributed.sharding import ashard
     x = layers.embed(prm["embed"], tokens)
     x = ashard(x, "batch", None, None)

@@ -1,6 +1,6 @@
 """Iteration-level continuous micro-batching for graph requests.
 
-The graph twin of :class:`repro.serving.scheduler.ContinuousBatcher`
+The graph twin of :class:`repro.serve.lm.ContinuousBatcher`
 (same submit / step / run-until-drained shape): queued requests are
 admitted FIFO into **block-diagonal** batches — one
 :func:`repro.data.graphs.batch_graphs` call per batch, so a single fused

@@ -1,4 +1,8 @@
-"""Continuous-batching serving scheduler.
+"""Continuous-batching LM serving scheduler (``repro.serve.lm``).
+
+Moved here from the seed-era ``repro.serving`` package — ``serve/`` is the
+one serving namespace (GNN engine in :mod:`repro.serve.engine`, the LM
+token-level scheduler here); ``repro.serving`` now raises with a pointer.
 
 Production serving keeps the decode batch full: finished requests release
 their slot immediately and queued requests claim it mid-flight (vLLM-style

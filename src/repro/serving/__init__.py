@@ -1,0 +1,13 @@
+"""Deprecation shim: ``repro.serving`` moved into :mod:`repro.serve`.
+
+The seed-era LM continuous-batching scheduler
+(``repro.serving.scheduler``) now lives at :mod:`repro.serve.lm`; the GNN
+inference engine is :mod:`repro.serve.engine`. The two near-identical
+package names confused imports for five PRs — this one raises so the
+stale path fails loudly instead of silently shadowing."""
+
+raise ImportError(
+    "repro.serving was retired: the LM continuous-batching scheduler "
+    "moved to repro.serve.lm (from repro.serve.lm import "
+    "ContinuousBatcher, Request); the GNN serving engine is repro.serve "
+    "(from repro.serve import GNNServer).")

@@ -7,7 +7,7 @@ import pytest
 
 from repro.models import lm
 from repro.models.config import ModelConfig
-from repro.serving.scheduler import ContinuousBatcher, Request
+from repro.serve.lm import ContinuousBatcher, Request
 
 KEY = jax.random.PRNGKey(0)
 
