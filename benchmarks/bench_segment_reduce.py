@@ -279,6 +279,30 @@ def run_smoke():
          f"compiles={st['compiles']}|buckets={st['buckets']}|"
          f"serving_compiles={st['compiles'] - st['cache']['prefills']}")
 
+    # -- training: the cached hot train step (fwd + bwd + adamw) ----------
+    # one Trainer on one shape bucket; fit() pays the single compile, then
+    # the row times the cached executable — the steady-state per-step cost
+    # the orchestration layer (repro.train) guarantees stays re-plan- and
+    # retrace-free (traces is part of the derived column as the audit)
+    from repro.optim import adamw as adamw_lib
+    from repro.train import (GraphEpochProvider, NodeClassification,
+                             Trainer, TrainerConfig)
+
+    tr_data = GraphEpochProvider(shapes=((128, 512),), graphs_per_shape=1,
+                                 feat=16, num_classes=8)
+    tr_task = NodeClassification.from_provider(tr_data, model="gcn",
+                                               hidden=32, impl="pallas")
+    trainer = Trainer(tr_task, tr_data, TrainerConfig(
+        steps=2, warmup_steps=1, opt=adamw_lib.AdamWConfig(lr=1e-2)))
+    tr_res = trainer.fit()
+    arrays, static = tr_task.prepare(tr_data.batch(0))
+    step_exe = trainer._executable(static)
+    t_step = timeit(lambda st: step_exe(st, arrays), tr_res.state,
+                    reps=3, warmup=1)
+    emit("smoke/train_step", t_step,
+         f"fwd+bwd+adamw|traces={trainer.traces}|"
+         f"buckets={len(trainer.buckets)}")
+
     # -- sharded message passing: 1 vs 4 host shards ----------------------
     # (needs >= 4 devices: main() forces the host device count before jax
     # initializes; locally run with XLA_FLAGS=--xla_force_host_platform_

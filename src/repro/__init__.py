@@ -20,6 +20,13 @@ Layers underneath (deep imports remain supported):
     repro.data    — graph synthesis, batching/padding, partitioning
     repro.models  — GNN/MoE/LM model zoo
     repro.serve   — GNN inference serving engine
+    repro.train   — DatasetProvider → Task → Trainer orchestration
+
+Training is one call (see :mod:`repro.train` / ``docs/training.md``):
+
+    data = repro.GraphEpochProvider()
+    task = repro.NodeClassification.from_provider(data, model="gcn")
+    result = repro.fit(task, data, repro.TrainerConfig(steps=100))
 """
 from repro.core.config_space import KernelConfig
 from repro.core.mp import choose_order, mp, mp_transform, mp_typed
@@ -53,6 +60,16 @@ from repro.models.gnn import MODELS, TYPED_MODELS
 from repro.models.gnn import forward as gnn_forward
 from repro.models.gnn import init as gnn_init
 from repro.serve import GNNServer
+from repro.train import (
+    DatasetProvider,
+    GraphEpochProvider,
+    NodeClassification,
+    Task,
+    Trainer,
+    TrainerConfig,
+    TrainState,
+    fit,
+)
 
 __all__ = [
     # graphs
@@ -69,4 +86,7 @@ __all__ = [
     "mp", "mp_transform", "mp_typed", "choose_order",
     # models + serving
     "MODELS", "TYPED_MODELS", "gnn_init", "gnn_forward", "GNNServer",
+    # training orchestration
+    "DatasetProvider", "GraphEpochProvider", "Task", "NodeClassification",
+    "Trainer", "TrainerConfig", "TrainState", "fit",
 ]

@@ -87,7 +87,14 @@ def wait_pending():
     _PENDING.clear()
 
 
-def latest_step(directory) -> Optional[int]:
+def latest_step(directory, at_or_before: Optional[int] = None) -> Optional[int]:
+    """Newest complete checkpoint step, or None.
+
+    ``at_or_before`` bounds the answer: the newest step ``<=`` it. The
+    failure-recovery path needs this — restoring a checkpoint *newer*
+    than the failed step (stale steps from an earlier run sharing the
+    directory) would jump the loop past its failure point with foreign
+    state."""
     directory = pathlib.Path(directory)
     if not directory.exists():
         return None
@@ -95,7 +102,9 @@ def latest_step(directory) -> Optional[int]:
     for child in directory.iterdir():
         m = _STEP_RE.match(child.name)
         if m and (child / "MANIFEST.json").exists():
-            steps.append(int(m.group(1)))
+            s = int(m.group(1))
+            if at_or_before is None or s <= at_or_before:
+                steps.append(s)
     return max(steps) if steps else None
 
 

@@ -56,12 +56,32 @@ class StepTimeout(RuntimeError):
 
 
 class StepWatchdog:
-    """Hard deadline around a blocking step call."""
+    """Hard deadline around a blocking step call.
+
+    A timed-out step's thread cannot be killed (Python offers no such
+    primitive) — it keeps running until the blocking call returns. The
+    watchdog *tracks* every such thread instead of dropping it on the
+    floor: :meth:`reap` joins the ones that have since finished and
+    reports how many are still alive, and each :meth:`run` reaps first,
+    so a long-lived loop cannot accumulate unobserved zombie threads.
+    """
 
     def __init__(self, timeout_s: float):
         self.timeout_s = timeout_s
+        self._timed_out: list[threading.Thread] = []
+
+    def reap(self) -> int:
+        """Join finished timed-out threads; return the count still alive."""
+        still = []
+        for th in self._timed_out:
+            th.join(0)
+            if th.is_alive():
+                still.append(th)
+        self._timed_out = still
+        return len(still)
 
     def run(self, fn: Callable[[], Any]) -> Any:
+        self.reap()
         result: list = []
         error: list = []
 
@@ -75,6 +95,7 @@ class StepWatchdog:
         th.start()
         th.join(self.timeout_s)
         if th.is_alive():
+            self._timed_out.append(th)
             raise StepTimeout(f"step exceeded {self.timeout_s}s deadline")
         if error:
             raise error[0]
@@ -106,10 +127,19 @@ class ResilientLoop:
         self.restarts = 0
         self.events: list[tuple] = []
 
-    def _restore(self):
-        latest = ckpt.latest_step(self.cfg.ckpt_dir)
-        if latest is None:
-            return 0
+    def _restore(self, failed_step: int, entry_state, entry_step: int):
+        """Roll back to the newest checkpoint **at or before** the failed
+        step. A newer checkpoint (stale steps from an earlier run sharing
+        the directory) would jump the loop past its failure point with
+        foreign state. With no eligible checkpoint, fall back to the
+        state the run entered with."""
+        latest = (ckpt.latest_step(self.cfg.ckpt_dir,
+                                   at_or_before=failed_step)
+                  if self.cfg.ckpt_dir else None)
+        if latest is None or latest < entry_step:
+            self.state = entry_state
+            self.events.append(("restored_entry", entry_step))
+            return entry_step
         self.state = ckpt.restore(self.state, self.cfg.ckpt_dir, step=latest)
         self.events.append(("restored", latest))
         return latest
@@ -117,6 +147,7 @@ class ResilientLoop:
     def run(self, num_steps: int, start_step: int = 0,
             metrics_cb: Optional[Callable] = None):
         step = start_step
+        entry_state = self.state        # _restore's no-checkpoint fallback
         watchdog = (StepWatchdog(self.cfg.step_timeout_s)
                     if self.cfg.step_timeout_s else None)
         while step < num_steps:
@@ -135,7 +166,7 @@ class ResilientLoop:
                 if metrics_cb:
                     metrics_cb(step, metrics, verdict)
                 step += 1
-                if step % self.cfg.ckpt_every == 0:
+                if self.cfg.ckpt_dir and step % self.cfg.ckpt_every == 0:
                     ckpt.save(self.state, self.cfg.ckpt_dir, step,
                               keep=self.cfg.keep)
                     self.events.append(("saved", step))
@@ -144,5 +175,7 @@ class ResilientLoop:
                 self.events.append(("failure", step, repr(e)))
                 if self.restarts > self.cfg.max_restarts:
                     raise
-                step = self._restore()
+                step = self._restore(step, entry_state, start_step)
+        if watchdog:
+            watchdog.reap()
         return self.state

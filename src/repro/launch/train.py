@@ -1,10 +1,13 @@
-"""End-to-end training driver (fault-tolerant loop).
+"""End-to-end LM training driver — a thin CLI over :func:`repro.train.fit`
+(the orchestration layer owns the jitted step, checkpoint/resume, and the
+fault-tolerant loop; this file only parses flags and wires the
+provider/task/trainer trio).
 
 Examples:
   # ~100M-param LM for a few hundred steps on CPU (examples deliverable):
   python -m repro.launch.train --arch qwen3-8b --reduced --steps 300
 
-  # host-mesh distributed smoke (2×2 devices):
+  # host-mesh distributed smoke (2×2 devices, the pjit build-step path):
   python -m repro.launch.train --arch qwen3-moe-30b-a3b --reduced \
       --mesh host --steps 20
 """
@@ -12,21 +15,16 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro import configs as cfglib
 from repro.checkpoint import checkpoint as ckpt
-from repro.data.tokens import SyntheticTokens, TokenDatasetConfig
-from repro.distributed import sharding as shd, step as steplib
-from repro.distributed.fault_tolerance import (ResilientLoop,
-                                               ResilientLoopConfig)
+from repro.data.tokens import TokenDatasetConfig
 from repro.launch.mesh import make_host_mesh
 from repro.models import lm
 from repro.optim import adamw
+from repro.train import LMTask, TokenProvider, TrainerConfig, fit
 
 
 def reduced_100m(cfg):
@@ -63,79 +61,34 @@ def main(argv=None):
     if args.reduced:
         cfg = reduced_100m(cfg)
     if cfg.family == "audio":
-        raise SystemExit("use examples/gnn_train.py-style drivers for enc-dec")
+        raise SystemExit("use examples/gnn_training.py-style drivers for "
+                         "enc-dec")
 
-    key = jax.random.PRNGKey(0)
-    params = lm.init(key, cfg)
-    n_params = sum(x.size for x in jax.tree_util.tree_leaves(params))
+    n_params = sum(x.size for x in jax.tree_util.tree_leaves(
+        lm.init(jax.random.PRNGKey(0), cfg)))
     print(f"arch={cfg.name} params={n_params/1e6:.1f}M "
           f"vocab={cfg.padded_vocab} layers={cfg.num_layers}")
 
-    ts = steplib.TrainStepConfig(
-        opt=adamw.AdamWConfig(lr=args.lr), warmup_steps=20,
-        total_steps=args.steps, remat_policy="none", moe_impl=args.moe_impl)
-    opt_state = adamw.init(params, ts.opt)
-
-    data = SyntheticTokens(TokenDatasetConfig(
+    task = LMTask(cfg, moe_impl=args.moe_impl)
+    data = TokenProvider(TokenDatasetConfig(
         vocab_size=cfg.vocab_size, seq_len=args.seq,
         global_batch=args.batch))
+    mesh = make_host_mesh(2, 2) if args.mesh == "host" else None
 
-    if args.mesh == "host":
-        mesh = make_host_mesh(2, 2)
-        plan = shd.ParallelPlan.for_mesh(mesh)
-        fn, shardings_for = steplib.build_train_step(cfg, mesh, plan, ts)
-        in_sh, _ = shardings_for(params, opt_state,
-                                 {"tokens": (args.batch, args.seq),
-                                  "labels": (args.batch, args.seq)})
-        with mesh:
-            params = jax.device_put(params, in_sh[0])
-            opt_state = jax.device_put(opt_state, in_sh[1])
-            train_step = jax.jit(fn, in_shardings=in_sh,
-                                 donate_argnums=(0, 1))
-    else:
-        mesh = None
+    trainer_cfg = TrainerConfig(
+        steps=args.steps, opt=adamw.AdamWConfig(lr=args.lr),
+        warmup_steps=20, ckpt_dir=args.ckpt_dir,
+        ckpt_every=args.ckpt_every, log_every=args.log_every)
 
-        def fn(params, opt_state, batch, step):
-            def loss(p):
-                return lm.loss_fn(p, cfg, batch, remat_policy="none",
-                                  moe_impl=args.moe_impl)
-            (l, metrics), grads = jax.value_and_grad(loss, has_aux=True)(params)
-            from repro.optim import schedule
-            lr_scale = schedule.warmup_cosine(step, ts.warmup_steps,
-                                              ts.total_steps)
-            new_p, new_o, om = adamw.update(grads, opt_state, params, ts.opt,
-                                            lr_scale)
-            return new_p, new_o, dict(metrics, loss=l, **om)
-
-        train_step = jax.jit(fn, donate_argnums=(0, 1))
-
-    losses = []
-
-    def step_fn(state, step):
-        params, opt_state = state
-        batch = {k: jnp.asarray(v) for k, v in data.batch(step).items()}
-        t0 = time.time()
-        params, opt_state, metrics = train_step(
-            params, opt_state, batch, jnp.asarray(step, jnp.int32))
-        loss = float(metrics["loss"])
-        losses.append(loss)
-        if step % args.log_every == 0:
-            print(f"step {step:5d} loss {loss:.4f} "
-                  f"gnorm {float(metrics['grad_norm']):.3f} "
-                  f"dt {time.time()-t0:.2f}s", flush=True)
-        return (params, opt_state), metrics
-
-    loop = ResilientLoop(
-        ResilientLoopConfig(args.ckpt_dir, ckpt_every=args.ckpt_every),
-        step_fn, (params, opt_state))
-    start = ckpt.latest_step(args.ckpt_dir) or 0
+    start = ckpt.latest_step(args.ckpt_dir) if args.ckpt_dir else None
     if start:
         print(f"resuming from checkpoint step {start}")
-        loop.state = ckpt.restore(loop.state, args.ckpt_dir, step=start)
-    loop.run(args.steps, start_step=start)
+    result = fit(task, data, trainer_cfg, mesh=mesh,
+                 resume=bool(args.ckpt_dir))
     ckpt.wait_pending()
-    print(f"final loss {losses[-1]:.4f} (first {losses[0]:.4f})")
-    return losses
+    print(f"final loss {result.losses[-1]:.4f} "
+          f"(first {result.losses[0]:.4f})")
+    return result.losses
 
 
 if __name__ == "__main__":

@@ -370,10 +370,15 @@ def forward(params, model: str, x, edge_index, num_nodes: int,
 
 def loss_fn(params, model: str, x, edge_index, labels, num_nodes: int,
             deg_inv_sqrt=None, impl: str = "ref", plan=None, *, mesh=None,
-            partition=None):
+            partition=None, edge_type=None, type_perm=None,
+            inv_type_perm=None, type_counts=None, rplan=None):
+    """Node-classification cross entropy — same keyword surface as
+    :func:`forward`, typed families included."""
     logits = forward(params, model, x, edge_index, num_nodes,
                      deg_inv_sqrt, impl, plan, mesh=mesh,
-                     partition=partition)
+                     partition=partition, edge_type=edge_type,
+                     type_perm=type_perm, inv_type_perm=inv_type_perm,
+                     type_counts=type_counts, rplan=rplan)
     logz = jax.nn.logsumexp(logits, axis=-1)
     gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
     return jnp.mean(logz - gold)

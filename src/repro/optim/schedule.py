@@ -1,4 +1,7 @@
-"""LR schedules (warmup + cosine decay)."""
+"""LR schedules (warmup + cosine decay), addressable by name via
+:func:`get` — every schedule shares the ``(step, warmup_steps,
+total_steps)`` signature and returns a multiplicative scale on the
+optimizer's base LR."""
 from __future__ import annotations
 
 import jax.numpy as jnp
@@ -13,3 +16,22 @@ def warmup_cosine(step, warmup_steps: int, total_steps: int,
     prog = jnp.clip(prog, 0.0, 1.0)
     cos = min_ratio + (1.0 - min_ratio) * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
     return jnp.where(step < warmup_steps, warm, cos)
+
+
+def constant(step, warmup_steps: int = 0, total_steps: int = 0):
+    """Flat scale 1 after the linear warmup (``total_steps`` unused)."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = step / jnp.maximum(warmup_steps, 1)
+    return jnp.where(step < warmup_steps, warm, jnp.ones_like(step))
+
+
+_SCHEDULES = {"warmup_cosine": warmup_cosine, "constant": constant}
+
+
+def get(name: str):
+    """Resolve a schedule by name (the ``TrainerConfig.lr_schedule`` knob)."""
+    try:
+        return _SCHEDULES[name]
+    except KeyError:
+        raise ValueError(f"unknown LR schedule {name!r}; "
+                         f"known: {sorted(_SCHEDULES)}") from None

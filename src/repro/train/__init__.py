@@ -1,0 +1,37 @@
+"""Training orchestration: ``DatasetProvider → Task → Trainer`` (the
+TF-GNN runner protocol shape), unified behind :func:`repro.train.fit`.
+
+    from repro import train
+
+    data = train.GraphEpochProvider(shapes=((96, 384), (128, 512)))
+    task = train.NodeClassification.from_provider(data, model="gcn")
+    result = train.fit(task, data, train.TrainerConfig(steps=50))
+
+The three legs are independently swappable: providers own deterministic
+``batch(step)`` data (replay-exact after checkpoint restore), tasks own
+model + loss behind ``init/prepare/loss``, and the trainer owns the
+jitted plan-reusing step, AdamW + schedule, checkpoint/resume, and the
+fault-tolerant loop. See ``docs/training.md``.
+"""
+from repro.train.providers import (DatasetProvider, GraphEpochProvider,
+                                   TokenProvider)
+from repro.train.task import (GraphStatic, LMStatic, LMTask,
+                              NodeClassification, Task)
+from repro.train.trainer import (FitResult, Trainer, TrainerConfig,
+                                 TrainState, fit)
+
+__all__ = [
+    "DatasetProvider",
+    "GraphEpochProvider",
+    "TokenProvider",
+    "Task",
+    "GraphStatic",
+    "NodeClassification",
+    "LMStatic",
+    "LMTask",
+    "Trainer",
+    "TrainerConfig",
+    "TrainState",
+    "FitResult",
+    "fit",
+]

@@ -1,0 +1,115 @@
+"""Dataset providers — the ``DatasetProvider`` leg of the orchestration
+protocol (``DatasetProvider → Task → Trainer``, the TF-GNN runner shape).
+
+A provider owns *what the model trains on*; the contract is a single
+method
+
+    provider.batch(step: int) -> batch
+
+that is **deterministic in the step index**: the same step always yields
+the same batch, with no iterator state to carry through checkpoints. That
+is the property the fault-tolerant loop
+(:class:`repro.distributed.fault_tolerance.ResilientLoop`) relies on —
+after a failure it restores the latest complete checkpoint and *replays*
+the intervening steps, and replay is exact only when data is a pure
+function of the step.
+
+Graph providers additionally keep their epoch of graphs **as persistent
+objects**, so the per-graph plan memo (:meth:`repro.data.graphs.Graph.
+make_plan`) survives across steps: the chunk metadata and kernel-config
+selection for a shape are paid once, and every later step (and every
+jitted train-step re-invocation on that shape bucket) reuses them —
+steps never re-plan.
+"""
+from __future__ import annotations
+
+from typing import Any, Protocol, runtime_checkable
+
+from repro.data.graphs import batch_graphs, synth_graph, synth_typed_graph
+from repro.data.tokens import SyntheticTokens, TokenDatasetConfig
+
+
+@runtime_checkable
+class DatasetProvider(Protocol):
+    """Anything with a deterministic ``batch(step)`` is a provider."""
+
+    def batch(self, step: int) -> Any:                 # pragma: no cover
+        ...
+
+
+class GraphEpochProvider:
+    """Synthetic graph epochs for node-classification training.
+
+    Builds a fixed pool of power-law graphs at a few distinct ``(|V|, |E|)``
+    shapes (``shapes``), optionally block-diagonally batched
+    ``graphs_per_batch`` at a time (:func:`repro.data.graphs.batch_graphs`
+    — one plan covers the whole batch), and cycles through the epoch
+    deterministically: ``batch(step) = epoch[step % len(epoch)]``.
+
+    Because the epoch members are constructed **once**, their plan memos
+    persist: the trainer sees exactly ``len(shapes)`` distinct shape
+    buckets, compiles one train step per bucket, and re-plans nothing.
+
+    ``typed=True`` yields :class:`~repro.data.graphs.TypedGraph` members
+    (zipf-skewed relation ids) for the relational families (RGCN/RGAT);
+    typed graphs are not block-diagonally batched (``graphs_per_batch``
+    must stay 1 — batching would drop the edge types).
+    """
+
+    def __init__(self, shapes=((96, 384), (128, 512)),
+                 graphs_per_shape: int = 2, graphs_per_batch: int = 1,
+                 feat: int = 32, num_classes: int = 16, typed: bool = False,
+                 num_relations: int = 4, alpha: float = 1.3, seed: int = 0,
+                 name: str = "train"):
+        if typed and graphs_per_batch != 1:
+            raise ValueError("typed graphs cannot be block-diagonally "
+                             "batched (edge types would be dropped); use "
+                             "graphs_per_batch=1")
+        if graphs_per_shape % graphs_per_batch:
+            raise ValueError("graphs_per_shape must be a multiple of "
+                             "graphs_per_batch")
+        self.feat = feat
+        self.num_classes = num_classes
+        self.num_relations = num_relations if typed else 0
+        self.typed = typed
+        epoch = []
+        for si, (v, e) in enumerate(shapes):
+            members = []
+            for j in range(graphs_per_shape):
+                s = seed * 9973 + si * 97 + j
+                if typed:
+                    members.append(synth_typed_graph(
+                        f"{name}-{v}x{e}-{j}", v, e,
+                        num_relations=num_relations, feat=feat,
+                        num_classes=num_classes, alpha=alpha, seed=s))
+                else:
+                    members.append(synth_graph(
+                        f"{name}-{v}x{e}-{j}", v, e, feat=feat,
+                        num_classes=num_classes, alpha=alpha, seed=s))
+            for k in range(0, len(members), graphs_per_batch):
+                chunk = members[k:k + graphs_per_batch]
+                epoch.append(chunk[0] if len(chunk) == 1
+                             else batch_graphs(chunk))
+        self._epoch = epoch
+
+    def __len__(self) -> int:
+        """Steps per epoch (distinct batches before the cycle repeats)."""
+        return len(self._epoch)
+
+    def batch(self, step: int):
+        return self._epoch[step % len(self._epoch)]
+
+
+class TokenProvider:
+    """LM token batches — a provider-protocol wrapper over the
+    deterministic :class:`repro.data.tokens.SyntheticTokens` pipeline
+    (fixed Markov language; each batch is a pure function of
+    ``(seed, step, host)``, so checkpoint replay is exact)."""
+
+    def __init__(self, cfg: TokenDatasetConfig, host_id: int = 0,
+                 num_hosts: int = 1):
+        self.cfg = cfg
+        self._ds = SyntheticTokens(cfg, host_id=host_id, num_hosts=num_hosts)
+
+    def batch(self, step: int):
+        return self._ds.batch(step)

@@ -98,3 +98,17 @@ def test_elastic_restore_new_sharding(tmp_path):
     assert back["w"].sharding == sh
     np.testing.assert_array_equal(np.asarray(back["w"]),
                                   np.asarray(tree["w"]))
+
+
+def test_latest_step_at_or_before(tmp_path):
+    """The failure-recovery bound: never answer a step newer than the
+    caller's failure point."""
+    from repro.checkpoint import checkpoint as ckpt
+
+    for s in (2, 5, 9):
+        ckpt.save({"x": np.ones(3) * s}, tmp_path, s)
+    assert ckpt.latest_step(tmp_path) == 9
+    assert ckpt.latest_step(tmp_path, at_or_before=9) == 9
+    assert ckpt.latest_step(tmp_path, at_or_before=5) == 5
+    assert ckpt.latest_step(tmp_path, at_or_before=4) == 2
+    assert ckpt.latest_step(tmp_path, at_or_before=1) is None

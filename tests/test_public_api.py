@@ -49,9 +49,66 @@ def test_core_exports_resolve():
     assert not missing, missing
 
 
-def test_serving_shim_raises_with_pointer():
-    with pytest.raises(ImportError, match="repro.serve"):
+def test_serving_package_is_gone():
+    """The serving/ -> serve/ migration is finished: the deprecation shim
+    was removed, so the old package simply does not exist anymore."""
+    with pytest.raises(ModuleNotFoundError):
         import repro.serving  # noqa: F401
+    import pathlib
+    import repro as repro_pkg
+    pkg_root = pathlib.Path(repro_pkg.__file__).parent
+    assert not (pkg_root / "serving").exists()
+
+
+# ---------------------------------------------------------------------------
+# training surface (ISSUE 7): repro.train exports + fit's kwarg trio
+# ---------------------------------------------------------------------------
+
+def test_train_surface_exports_resolve():
+    from repro import train
+    missing = [n for n in train.__all__ if not hasattr(train, n)]
+    assert not missing, missing
+    # the facade re-exports the orchestration surface
+    for name in ("Trainer", "TrainerConfig", "TrainState", "Task",
+                 "NodeClassification", "DatasetProvider",
+                 "GraphEpochProvider", "fit"):
+        assert name in repro.__all__, name
+        assert getattr(repro, name) is getattr(train, name)
+    # the acceptance criterion, verbatim
+    from repro import fit
+    assert callable(fit)
+
+
+def test_fit_kwarg_trio_uniform():
+    """repro.train.fit and Task.prepare carry the library-wide
+    (plan=, config=, tune=) trio with None defaults, like every other
+    plan-aware entry point."""
+    import repro.train as train
+    for fn in (train.fit, train.NodeClassification.prepare,
+               train.LMTask.prepare):
+        params = inspect.signature(fn).parameters
+        for kw in ("plan", "config", "tune"):
+            assert kw in params, f"{fn.__qualname__} missing {kw}="
+            assert params[kw].default is None, (
+                f"{fn.__qualname__} {kw}= must default to None")
+            assert params[kw].kind is inspect.Parameter.KEYWORD_ONLY, (
+                f"{fn.__qualname__} {kw}= must be keyword-only")
+
+
+def test_dataset_provider_protocol_is_structural():
+    """Any object with batch(step) satisfies the provider protocol —
+    no registration or inheritance required."""
+    from repro.train import DatasetProvider, GraphEpochProvider
+
+    class Custom:
+        def batch(self, step):
+            return step
+
+    assert isinstance(Custom(), DatasetProvider)
+    assert isinstance(
+        GraphEpochProvider(shapes=((16, 32),), graphs_per_shape=1, feat=4,
+                           num_classes=2),
+        DatasetProvider)
 
 
 # ---------------------------------------------------------------------------

@@ -485,3 +485,100 @@ def test_server_request_stats_and_throughput():
     assert compile_steps
     for r in compile_steps:
         assert any(k.startswith("fused:") for k in r.fusion)
+
+
+# ---------------------------------------------------------------------------
+# LM continuous batching (serve/lm.py — ported from the retired
+# tests/test_serving.py when the serving/ shim package was removed):
+# slot turnover, ragged positions, exact equivalence with serial decoding
+# ---------------------------------------------------------------------------
+
+from repro.models import lm  # noqa: E402
+from repro.models.config import ModelConfig  # noqa: E402
+from repro.serve.lm import ContinuousBatcher, Request  # noqa: E402
+
+
+def _lm_cfg():
+    return ModelConfig("t", family="dense", num_layers=2, d_model=32,
+                       num_heads=4, num_kv_heads=2, head_dim=8, d_ff=64,
+                       vocab_size=128, dtype="float32", max_seq=64)
+
+
+def _serial_decode(params, cfg, prompt, gen, max_len=32):
+    """Reference: one request alone in a batch-1 batcher-free loop."""
+    state = lm.init_decode_state(cfg, 1, max_len, jnp.float32)
+    logits = None
+    for t in prompt:
+        logits, state = lm.decode_step(
+            params, cfg, jnp.asarray([[t]], jnp.int32), state)
+    out = []
+    tok = int(jnp.argmax(logits[0, -1, :cfg.vocab_size]))
+    for _ in range(gen):
+        out.append(tok)
+        logits, state = lm.decode_step(
+            params, cfg, jnp.asarray([[tok]], jnp.int32), state)
+        tok = int(jnp.argmax(logits[0, -1, :cfg.vocab_size]))
+    return out
+
+
+def test_batcher_matches_serial_decoding():
+    cfg = _lm_cfg()
+    params = lm.init(KEY, cfg)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in (5, 9, 3, 7)]
+    gens = [4, 6, 3, 5]
+
+    batcher = ContinuousBatcher(params, cfg, batch_size=2, max_len=32)
+    for uid, (p, g) in enumerate(zip(prompts, gens)):
+        batcher.submit(Request(uid=uid, prompt=p, max_new_tokens=g))
+    finished = batcher.run_until_drained()
+
+    assert set(finished) == {0, 1, 2, 3}
+    for uid, (p, g) in enumerate(zip(prompts, gens)):
+        want = _serial_decode(params, cfg, p, g)
+        assert finished[uid] == want, (uid, finished[uid], want)
+
+
+def test_batcher_slot_turnover():
+    """More requests than slots: slots are reused mid-flight."""
+    cfg = _lm_cfg()
+    params = lm.init(KEY, cfg)
+    rng = np.random.default_rng(1)
+    batcher = ContinuousBatcher(params, cfg, batch_size=2, max_len=32)
+    for uid in range(5):
+        batcher.submit(Request(
+            uid=uid, prompt=rng.integers(0, 128, 4).astype(np.int32),
+            max_new_tokens=3))
+    finished = batcher.run_until_drained()
+    assert len(finished) == 5
+    assert all(len(v) == 3 for v in finished.values())
+
+
+def test_batcher_streams_tokens():
+    cfg = _lm_cfg()
+    params = lm.init(KEY, cfg)
+    seen = []
+    batcher = ContinuousBatcher(params, cfg, batch_size=1, max_len=32)
+    batcher.submit(Request(
+        uid=7, prompt=np.asarray([1, 2, 3], np.int32), max_new_tokens=4,
+        on_token=lambda uid, tok: seen.append((uid, tok))))
+    finished = batcher.run_until_drained()
+    assert [t for _, t in seen] == finished[7]
+    assert all(uid == 7 for uid, _ in seen)
+
+
+def test_ragged_decode_matches_scalar_path():
+    """decode_step(lengths=[n,n]) ≡ decode_step (shared counter) when all
+    slots are aligned."""
+    cfg = _lm_cfg()
+    params = lm.init(KEY, cfg)
+    toks = jax.random.randint(KEY, (2, 6), 0, cfg.vocab_size)
+    s1 = lm.init_decode_state(cfg, 2, 16, jnp.float32)
+    s2 = lm.init_decode_state(cfg, 2, 16, jnp.float32)
+    for t in range(6):
+        lg1, s1 = lm.decode_step(params, cfg, toks[:, t:t + 1], s1)
+        lg2, s2 = lm.decode_step(params, cfg, toks[:, t:t + 1], s2,
+                                 lengths=jnp.full((2,), t, jnp.int32))
+    np.testing.assert_allclose(np.asarray(lg1), np.asarray(lg2),
+                               rtol=1e-5, atol=1e-5)

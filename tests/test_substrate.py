@@ -147,3 +147,87 @@ def test_resilient_loop_gives_up(tmp_path):
         ResilientLoopConfig(str(tmp_path), max_restarts=2), step, {})
     with pytest.raises(RuntimeError, match="always down"):
         loop.run(3)
+
+
+def test_watchdog_reaps_timed_out_threads():
+    """Regression: a timed-out step's thread used to be dropped on the
+    floor; the watchdog now tracks it and reaps it once it finishes."""
+    wd = StepWatchdog(0.05)
+    with pytest.raises(StepTimeout):
+        wd.run(lambda: time.sleep(0.4))
+    assert len(wd._timed_out) == 1
+    deadline = time.monotonic() + 5.0
+    while wd.reap() and time.monotonic() < deadline:
+        time.sleep(0.02)
+    assert wd.reap() == 0
+    assert not wd._timed_out
+    # and a later run() starts from a clean slate
+    assert wd.run(lambda: 7) == 7
+
+
+def test_resilient_restore_never_jumps_past_failure(tmp_path):
+    """Regression: a checkpoint *newer* than the failed step (stale steps
+    from an earlier run sharing the directory) must not be restored — it
+    would jump the loop past its failure point with foreign state."""
+    from repro.checkpoint import checkpoint as ckpt
+
+    d = str(tmp_path / "shared")
+    # an earlier run left a step-8 checkpoint with different state behind
+    ckpt.save({"x": jnp.asarray(999.0)}, d, 8)
+
+    def mk_step(fail_at):
+        fired = {"done": False}
+
+        def step(state, i):
+            if i == fail_at and not fired["done"]:
+                fired["done"] = True
+                raise RuntimeError("injected")
+            return {"x": state["x"] * 1.5 + i}, {}
+        return step
+
+    loop = ResilientLoop(ResilientLoopConfig(d, ckpt_every=4),
+                         mk_step(fail_at=3), {"x": jnp.ones(())})
+    s = loop.run(6)
+
+    clean = ResilientLoop(ResilientLoopConfig(str(tmp_path / "c"),
+                                              ckpt_every=4),
+                          mk_step(fail_at=None), {"x": jnp.ones(())})
+    s_clean = clean.run(6)
+    assert float(s["x"]) == pytest.approx(float(s_clean["x"]))
+    # failure hit before the run's own first save: restored the entry
+    # state, not the stale step-8 checkpoint
+    assert ("restored_entry", 0) in loop.events
+    assert ("restored", 8) not in loop.events
+
+
+def test_resilient_loop_without_ckpt_dir(tmp_path):
+    """ckpt_dir='' runs checkpoint-less: failures roll back to the entry
+    state and nothing is ever written to disk."""
+    def mk_step(fail_at):
+        fired = {"done": False}
+
+        def step(state, i):
+            if i == fail_at and not fired["done"]:
+                fired["done"] = True
+                raise RuntimeError("injected")
+            return {"x": state["x"] * 1.5 + i}, {}
+        return step
+
+    loop = ResilientLoop(ResilientLoopConfig("", ckpt_every=2),
+                         mk_step(fail_at=3), {"x": jnp.ones(())})
+    s = loop.run(5)
+    want = ResilientLoop(ResilientLoopConfig("", ckpt_every=2),
+                         mk_step(fail_at=None), {"x": jnp.ones(())}).run(5)
+    assert float(s["x"]) == pytest.approx(float(want["x"]))
+    assert ("restored_entry", 0) in loop.events
+    assert not any(e[0] == "saved" for e in loop.events)
+
+
+def test_schedule_registry():
+    from repro.optim import schedule
+
+    assert schedule.get("warmup_cosine") is warmup_cosine
+    assert float(schedule.get("constant")(50, 10, 100)) == 1.0
+    assert float(schedule.get("constant")(5, 10, 100)) == pytest.approx(0.5)
+    with pytest.raises(ValueError, match="unknown LR schedule"):
+        schedule.get("nope")

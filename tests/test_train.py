@@ -1,0 +1,295 @@
+"""Training orchestration (ISSUE 7): provider determinism, the Task
+protocol, trainer compile discipline (one trace per shape bucket),
+TrainState checkpoint round-trips, kill-and-resume trajectory identity,
+and fault-tolerant replay through ``fit``."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro.data.graphs import synth_typed_graph
+from repro.checkpoint import checkpoint as ckpt
+from repro.models import gnn
+from repro.optim import adamw
+from repro.train import (DatasetProvider, GraphEpochProvider, LMStatic,
+                         LMTask, NodeClassification, Task, TokenProvider,
+                         Trainer, TrainerConfig, TrainState, fit)
+
+SHAPES = ((48, 192), (64, 256))
+
+
+def mk_trainer(model="gcn", steps=12, impl="ref", typed=False, shapes=SHAPES,
+               ckpt_dir=None, ckpt_every=3, lr=1e-2, seed=0, **cfg_kw):
+    data = GraphEpochProvider(shapes=shapes, graphs_per_shape=2, feat=16,
+                              num_classes=8, typed=typed, num_relations=3,
+                              seed=seed)
+    task = NodeClassification.from_provider(data, model=model, hidden=32,
+                                            impl=impl)
+    cfg = TrainerConfig(steps=steps, warmup_steps=2,
+                        opt=adamw.AdamWConfig(lr=lr, weight_decay=0.0),
+                        seed=seed, ckpt_dir=ckpt_dir, ckpt_every=ckpt_every,
+                        **cfg_kw)
+    return Trainer(task, data, cfg)
+
+
+# ---------------------------------------------------------------------------
+# providers
+# ---------------------------------------------------------------------------
+
+def test_provider_deterministic_and_cyclic():
+    data = GraphEpochProvider(shapes=SHAPES, graphs_per_shape=2, feat=8,
+                              num_classes=4)
+    assert isinstance(data, DatasetProvider)
+    assert len(data) == 4
+    # same step -> the SAME object (plan memo persists across steps)
+    assert data.batch(1) is data.batch(1)
+    assert data.batch(1) is data.batch(1 + len(data))
+    assert data.batch(0) is not data.batch(1)
+
+
+def test_provider_batching_and_guards():
+    data = GraphEpochProvider(shapes=((32, 96),), graphs_per_shape=4,
+                              graphs_per_batch=2, feat=8, num_classes=4)
+    assert len(data) == 2
+    g = data.batch(0)
+    assert g.num_graphs == 2 and g.num_nodes == 64
+    with pytest.raises(ValueError, match="typed"):
+        GraphEpochProvider(typed=True, graphs_per_batch=2,
+                           graphs_per_shape=2)
+    with pytest.raises(ValueError, match="multiple"):
+        GraphEpochProvider(graphs_per_shape=3, graphs_per_batch=2)
+
+
+def test_token_provider_wraps_synthetic_tokens():
+    from repro.data.tokens import TokenDatasetConfig
+    data = TokenProvider(TokenDatasetConfig(128, 16, 4))
+    a, b = data.batch(3), data.batch(3)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    assert a["tokens"].shape == (4, 16)
+
+
+# ---------------------------------------------------------------------------
+# task protocol + plan canonicalization
+# ---------------------------------------------------------------------------
+
+def test_task_protocol_structural():
+    t = NodeClassification()
+    assert isinstance(t, Task)
+    assert isinstance(LMTask(cfg=None), Task)
+
+
+def test_prepare_same_bucket_same_treedef():
+    """Two different graphs of one shape must produce arrays with the
+    SAME pytree treedef — the canonicalized plan aux is what keeps the
+    jitted step from retracing."""
+    data = GraphEpochProvider(shapes=((48, 192),), graphs_per_shape=2,
+                              feat=16, num_classes=8)
+    task = NodeClassification.from_provider(data, model="gcn", hidden=32)
+    a0, s0 = task.prepare(data.batch(0))
+    a1, s1 = task.prepare(data.batch(1))
+    assert s0 == s1
+    assert (jax.tree_util.tree_structure(a0)
+            == jax.tree_util.tree_structure(a1))
+    # and the leaves still differ (each graph keeps its own chunk metadata)
+    assert a0["plan"].max_chunks == a1["plan"].max_chunks
+    assert a0["plan"].config == a1["plan"].config
+
+
+def test_prepare_model_graph_family_mismatch():
+    data = GraphEpochProvider(shapes=((32, 96),), graphs_per_shape=1,
+                              feat=8, num_classes=4)
+    task = NodeClassification.from_provider(data, model="rgcn")
+    with pytest.raises(ValueError, match="disagree"):
+        task.prepare(data.batch(0))
+
+
+def test_explicit_plan_is_authoritative():
+    data = GraphEpochProvider(shapes=((32, 96),), graphs_per_shape=1,
+                              feat=8, num_classes=4)
+    g = data.batch(0)
+    task = NodeClassification.from_provider(data, model="gcn", hidden=16)
+    myplan = g.make_plan(task.plan_feat)
+    arrays, _ = task.prepare(g, plan=myplan)
+    assert arrays["plan"] is myplan
+
+
+def test_gnn_loss_fn_accepts_typed_kwargs():
+    """Satellite: models.gnn.loss_fn carries the same typed surface as
+    forward (edge_type + permutation triple + rplan)."""
+    g = synth_typed_graph("t", 40, 160, num_relations=3, feat=8,
+                          num_classes=4, seed=0)
+    params = gnn.init(jax.random.PRNGKey(0), "rgcn", 8, 16, 4,
+                      num_relations=3)
+    loss = gnn.loss_fn(
+        params, "rgcn", jnp.asarray(g.x), jnp.asarray(g.edge_index),
+        jnp.asarray(g.labels), g.num_nodes, jnp.asarray(g.deg_inv_sqrt),
+        edge_type=jnp.asarray(g.edge_type),
+        type_perm=jnp.asarray(g.type_perm),
+        inv_type_perm=jnp.asarray(g.inv_type_perm),
+        type_counts=jnp.asarray(g.type_counts))
+    assert np.isfinite(float(loss))
+
+
+# ---------------------------------------------------------------------------
+# trainer: compile discipline + loss behaviour
+# ---------------------------------------------------------------------------
+
+def test_fit_one_trace_per_bucket_and_loss_decreases():
+    t = mk_trainer(steps=16, impl="pallas", lr=1e-2)
+    res = t.fit()
+    assert res.losses[-1] < res.losses[0]
+    assert res.traces == len(res.buckets) == len(SHAPES)
+    # a second fit on the warm trainer compiles nothing new
+    res2 = t.fit()
+    assert res2.traces == res.traces
+    assert len(res.losses) == 16
+
+
+def test_typed_training_one_trace():
+    t = mk_trainer(model="rgcn", typed=True, shapes=((48, 192),), steps=10)
+    res = t.fit()
+    assert res.losses[-1] < res.losses[0]
+    assert res.traces == len(res.buckets) == 1
+    assert res.buckets[0].typed
+
+
+def test_fit_functional_entry_point():
+    data = GraphEpochProvider(shapes=((32, 96),), graphs_per_shape=1,
+                              feat=8, num_classes=4)
+    task = NodeClassification.from_provider(data, model="gin", hidden=16,
+                                            impl="ref")
+    res = fit(task, data, TrainerConfig(steps=4, warmup_steps=1))
+    assert len(res.losses) == 4 and np.isfinite(res.losses).all()
+    assert repro.fit is fit
+
+
+def test_metrics_include_accuracy_and_optimizer():
+    seen = {}
+
+    def cb(step, metrics, verdict):
+        seen.update(metrics)
+
+    mk_trainer(steps=2).fit(metrics_cb=cb)
+    for k in ("loss", "accuracy", "grad_norm", "lr"):
+        assert k in seen, k
+
+
+# ---------------------------------------------------------------------------
+# checkpoint round-trip + kill-and-resume
+# ---------------------------------------------------------------------------
+
+def test_trainstate_checkpoint_roundtrip(tmp_path):
+    """The full GNN TrainState (params + AdamW moments + step + PRNG key)
+    survives save/restore bitwise."""
+    t = mk_trainer(steps=4, ckpt_dir=str(tmp_path))
+    res = t.fit()
+    state = res.state
+    ckpt.save(state, tmp_path / "rt", 4)
+    restored = ckpt.restore(t.init_state(), tmp_path / "rt", step=4)
+    assert isinstance(restored, TrainState)
+    leaves_a = jax.tree_util.tree_leaves(state)
+    leaves_b = jax.tree_util.tree_leaves(restored)
+    assert len(leaves_a) == len(leaves_b)
+    for a, b in zip(leaves_a, leaves_b):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert int(restored.step) == 4
+
+
+def test_kill_and_resume_identical_trajectory(tmp_path):
+    """A run killed mid-flight and resumed from its checkpoint produces a
+    loss trajectory identical to the uninterrupted run (deterministic
+    step-indexed data + checkpointed PRNG key)."""
+    full = mk_trainer(steps=12).fit()
+
+    class Killed(Exception):
+        pass
+
+    def killer(step, metrics, verdict):
+        if step == 7:
+            raise Killed()          # not in ResilientLoop's catch list
+
+    t_part = mk_trainer(steps=12, ckpt_dir=str(tmp_path), ckpt_every=3)
+    with pytest.raises(Killed):
+        t_part.fit(metrics_cb=killer)
+    assert ckpt.latest_step(tmp_path) == 6
+
+    res = mk_trainer(steps=12, ckpt_dir=str(tmp_path),
+                     ckpt_every=3).fit(resume=True)
+    assert res.start_step == 6
+    assert len(res.losses) == 6
+    np.testing.assert_allclose(res.losses, full.losses[6:], atol=1e-6)
+    # deterministic replay is in fact bitwise on CPU
+    assert res.losses == full.losses[6:]
+
+
+def test_resume_flag_validation(tmp_path):
+    t = mk_trainer(steps=2)
+    with pytest.raises(ValueError, match="ckpt_dir"):
+        t.fit(resume=True)
+    t2 = mk_trainer(steps=2, ckpt_dir=str(tmp_path))
+    with pytest.raises(ValueError, match="not both"):
+        t2.fit(resume=True, state=t2.init_state())
+    # resume over an empty directory is a cold start, not an error
+    res = t2.fit(resume=True)
+    assert res.start_step == 0 and len(res.losses) == 2
+
+
+def test_fault_tolerant_replay_inside_fit(tmp_path):
+    """A failure the ResilientLoop *can* handle (RuntimeError) restores
+    the newest checkpoint at-or-before the failed step and replays to the
+    clean run's exact trajectory."""
+    clean = mk_trainer(steps=10).fit()
+
+    fired = {"done": False}
+
+    def faulty(step, metrics, verdict):
+        if step == 5 and not fired["done"]:
+            fired["done"] = True
+            raise RuntimeError("injected")
+
+    t = mk_trainer(steps=10, ckpt_dir=str(tmp_path), ckpt_every=2)
+    res = t.fit(metrics_cb=faulty)
+    assert res.losses == clean.losses
+    assert any(e[0] == "failure" for e in res.events)
+    assert ("restored", 4) in res.events
+
+
+# ---------------------------------------------------------------------------
+# sharded + LM paths
+# ---------------------------------------------------------------------------
+
+def test_sharded_training_matches_single_device():
+    from repro.core.dist_mp import make_shard_mesh
+    mesh = make_shard_mesh(1)
+    t_single = mk_trainer(steps=3, impl="pallas")
+    t_shard = mk_trainer(steps=3, impl="pallas")
+    t_shard.mesh = mesh
+    r1 = t_single.fit()
+    r2 = t_shard.fit()
+    assert r2.buckets[0].shards == 1
+    np.testing.assert_allclose(r2.losses, r1.losses, rtol=1e-5, atol=1e-5)
+
+
+def test_typed_sharded_raises():
+    from repro.core.dist_mp import make_shard_mesh
+    data = GraphEpochProvider(shapes=((32, 96),), graphs_per_shape=1,
+                              feat=8, num_classes=4, typed=True,
+                              num_relations=2)
+    task = NodeClassification.from_provider(data, model="rgcn", hidden=16)
+    with pytest.raises(NotImplementedError):
+        task.prepare(data.batch(0), mesh=make_shard_mesh(1))
+
+
+def test_lm_task_generic_path():
+    from repro.data.tokens import TokenDatasetConfig
+    from repro.models.config import ModelConfig
+    cfg = ModelConfig("t", family="dense", num_layers=2, d_model=32,
+                      num_heads=4, num_kv_heads=2, head_dim=8, d_ff=64,
+                      vocab_size=128, dtype="float32", max_seq=64)
+    task = LMTask(cfg)
+    data = TokenProvider(TokenDatasetConfig(128, 16, 4))
+    res = fit(task, data, TrainerConfig(steps=3, warmup_steps=1))
+    assert len(res.losses) == 3 and np.isfinite(res.losses).all()
+    assert res.buckets == (LMStatic(4, 16),)
+    assert res.traces == 1
