@@ -195,6 +195,66 @@ def run_smoke():
          f"{str(times[picked] < times[other]).lower()}|"
          f"speedup={times[other] / times[picked]:.2f}x")
 
+    # -- precision (io dtype axis): bf16 halves the bandwidth-bound bytes -
+    # XLA:CPU caveat: bf16 *compute* under the Pallas interpreter falls off
+    # XLA's fast path (emulated via fp32 converts), so a full-op bf16
+    # wall-clock on this container measures the emulation, not the kernel.
+    # The measured pair therefore isolates the bandwidth-bound stage the io
+    # dtype targets — the row gather is a pure memcpy, byte-for-byte the
+    # code both dtypes run — and the full-op bf16 row carries the v5e
+    # roofline projection in its derived column (the bench-wide convention:
+    # wall-clock characterizes algorithms under XLA:CPU, `derived` carries
+    # the analytical v5e numbers).
+    mg, vg, fg = 120_000, 8192, 256
+    gsrc = jnp.asarray(rng.integers(0, vg, mg).astype(np.int32))
+    hg32 = jnp.asarray(rng.standard_normal((vg, fg), np.float32))
+    hg16 = hg32.astype(jnp.bfloat16)
+    gather_fn = jax.jit(lambda hh: jnp.take(hh, gsrc, axis=0))
+    t_g32 = timeit(gather_fn, hg32, reps=5, warmup=2)
+    t_g16 = timeit(gather_fn, hg16, reps=5, warmup=2)
+    emit("smoke/precision/row_gather_fp32", t_g32,
+         f"m={mg}|f={fg}|bandwidth_bound_stage")
+    emit("smoke/precision/row_gather_bf16", t_g16,
+         f"bf16_speedup={t_g32 / t_g16:.2f}x|gate>=1.2x")
+    h16 = h.astype(jnp.bfloat16)
+    full16 = jax.jit(lambda hh: ops.index_segment_reduce(
+        hh, src, dst, v, "sum", "pallas", None, plan))
+    t_full16 = timeit(full16, h16, reps=3, warmup=1)
+    pr_cfg = KernelConfig("PR", 256, 128, 512, 32)
+    c32 = costmodel.spmm_cost(200_000, 20_000, 256, pr_cfg,
+                              dtype_bytes=4).total_s
+    c16 = costmodel.spmm_cost(200_000, 20_000, 256, pr_cfg,
+                              dtype_bytes=2).total_s
+    emit("smoke/precision/gather_reduce_bf16", t_full16,
+         f"v5e_model_speedup_vs_fp32={c32 / c16:.2f}x|"
+         "wall_is_xla_cpu_bf16_emulation")
+
+    # -- fully-fused SpMM+GEMM (one launch) vs the best two-launch order --
+    # fp32 interpret wall-clock: the fused win here is *structural* — one
+    # launch instead of two, no (S, d_in) aggregate or (E, d_out) edge
+    # tensor in HBM, and no per-feature-tile re-walk of the edge index —
+    # so the ratio survives the interpreter (and only widens on hardware,
+    # where the saved HBM round-trip matters more).
+    d_sq = 256
+    sq_plan = make_plan(g.edge_index[1], v, feat=d_sq, config=cfg)
+    xsq = jnp.asarray(rng.standard_normal((v, d_sq), np.float32))
+    wsq = jnp.asarray(rng.standard_normal((d_sq, d_sq), np.float32)
+                      / np.sqrt(d_sq))
+    tfu = {}
+    for order in ("aggregate_first", "transform_first", "fused"):
+        fn = jax.jit(lambda x, order=order: mp_transform(
+            x, wsq, ei, v, reduce="sum", impl="pallas", plan=sq_plan,
+            order=order))
+        tfu[order] = timeit(fn, xsq, reps=5, warmup=2)
+    best2 = min(tfu["aggregate_first"], tfu["transform_first"])
+    picked_f = choose_order(d_sq, d_sq, plan=sq_plan, allow_fused=True)
+    emit("smoke/mp_fused/two_launch_best", best2,
+         f"d_in={d_sq}|d_out={d_sq}|"
+         f"order={'aggregate_first' if best2 == tfu['aggregate_first'] else 'transform_first'}")
+    emit("smoke/mp_fused/fused_one_launch", tfu["fused"],
+         f"fused_speedup={best2 / tfu['fused']:.2f}x|gate>=1.15x|"
+         f"auto_picks={picked_f}")
+
     # -- heterogeneous: grouped segment_matmul vs per-type Python loop ----
     # FASTEN's argument at CI scale: R per-relation transforms as ONE
     # grouped launch (mp_typed) against the loop-over-types baseline

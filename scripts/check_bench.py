@@ -57,6 +57,15 @@ def main(argv=None) -> int:
         default=float(os.environ.get("REPRO_BENCH_GATE_TOL", "1.25")),
         help="max allowed geomean slowdown (fresh/baseline)",
     )
+    ap.add_argument(
+        "--require-rows",
+        nargs="+",
+        default=[],
+        metavar="NAME",
+        help="row names (exact) that MUST be present in the fresh artifact — "
+        "guards against a smoke section silently disappearing (e.g. the "
+        "precision or fused-launch rows) while the geomean still passes",
+    )
     args = ap.parse_args(argv)
 
     try:
@@ -64,6 +73,15 @@ def main(argv=None) -> int:
         fresh = load_rows(args.fresh)
     except (OSError, ValueError) as exc:
         print(f"check_bench: cannot load artifacts: {exc}", file=sys.stderr)
+        return 1
+
+    missing = [n for n in args.require_rows if n not in fresh]
+    if missing:
+        print(
+            f"check_bench: required rows missing from {args.fresh}: "
+            f"{', '.join(missing)}",
+            file=sys.stderr,
+        )
         return 1
 
     common = sorted(set(base) & set(fresh))

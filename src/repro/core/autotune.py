@@ -82,8 +82,15 @@ def quantize_features(feats: InputFeatures,
 
 
 def perf_key(backend: str, op: str, feats: InputFeatures) -> str:
+    """``backend / op [@io-dtype shelf] / quantized shape class``.
+
+    The io dtype is a separate *shelf*, not a tree feature: fp32 keys keep
+    their historical format (warm caches stay warm) and lowered-precision
+    sweeps land next to them under ``op@b2`` without retraining the
+    decision tree's 3-D feature vector."""
     q = quantize_features(feats)
-    return f"{backend}/{op}/" + ",".join(f"{v:g}" for v in q)
+    shelf = "" if feats.dtype_bytes == 4 else f"@b{feats.dtype_bytes}"
+    return f"{backend}/{op}{shelf}/" + ",".join(f"{v:g}" for v in q)
 
 
 # ---------------------------------------------------------------------------
@@ -173,19 +180,31 @@ def _default_db(path_key: str) -> PerfDB:
 # Each adapter builds deterministic synthetic inputs for a shape class and
 # returns ``run(cfg) -> zero-arg jitted callable``; the tuner times it.
 
-def _synth(idx_size: int, num_segments: int, feat: int, seed: int):
+def _synth(idx_size: int, num_segments: int, feat: int, seed: int,
+           dtype=np.float32):
     rng = np.random.default_rng(seed)
     idx = np.sort(rng.integers(0, max(num_segments, 1),
                                size=idx_size)).astype(np.int32)
     x = rng.standard_normal((idx_size, feat)).astype(np.float32)
+    if np.dtype(dtype) != np.float32:
+        import jax.numpy as jnp
+        x = np.asarray(jnp.asarray(x).astype(dtype))
     return rng, idx, x
 
 
-def _runner_segment_reduce(idx_size, num_segments, feat, interpret, seed):
+def _cast(arr, dtype):
+    """Cast a synthetic fp32 numpy array to the sweep's io dtype."""
+    import jax.numpy as jnp
+    a = jnp.asarray(arr)
+    return a if np.dtype(dtype) == np.float32 else a.astype(dtype)
+
+
+def _runner_segment_reduce(idx_size, num_segments, feat, interpret, seed,
+                           dtype=np.float32):
     import jax.numpy as jnp
 
     from repro.kernels import ops as kops
-    _, idx, x = _synth(idx_size, num_segments, feat, seed)
+    _, idx, x = _synth(idx_size, num_segments, feat, seed, dtype)
     xj, idxj = jnp.asarray(x), jnp.asarray(idx)
 
     def run(cfg: KernelConfig):
@@ -196,13 +215,14 @@ def _runner_segment_reduce(idx_size, num_segments, feat, interpret, seed):
 
 
 def _runner_gather_segment_reduce(idx_size, num_segments, feat, interpret,
-                                  seed, reduce: str = "sum"):
+                                  seed, reduce: str = "sum",
+                                  dtype=np.float32):
     import jax.numpy as jnp
 
     from repro.kernels import ops as kops
     rng, seg, _ = _synth(idx_size, num_segments, feat, seed)
-    h = jnp.asarray(rng.standard_normal(
-        (max(num_segments, 1), feat)).astype(np.float32))
+    h = _cast(rng.standard_normal(
+        (max(num_segments, 1), feat)).astype(np.float32), dtype)
     gather_idx = jnp.asarray(rng.integers(
         0, max(num_segments, 1), size=idx_size).astype(np.int32))
     segj = jnp.asarray(seg)
@@ -215,13 +235,14 @@ def _runner_gather_segment_reduce(idx_size, num_segments, feat, interpret,
     return run
 
 
-def _runner_segment_softmax(idx_size, num_segments, feat, interpret, seed):
+def _runner_segment_softmax(idx_size, num_segments, feat, interpret, seed,
+                            dtype=np.float32):
     import jax.numpy as jnp
 
     from repro.kernels import ops as kops
     rng, seg, _ = _synth(idx_size, num_segments, feat, seed)
-    x = jnp.asarray(rng.standard_normal(
-        (idx_size, max(feat, 1))).astype(np.float32))
+    x = _cast(rng.standard_normal(
+        (idx_size, max(feat, 1))).astype(np.float32), dtype)
     segj = jnp.asarray(seg)
 
     def run(cfg: KernelConfig):
@@ -230,7 +251,8 @@ def _runner_segment_softmax(idx_size, num_segments, feat, interpret, seed):
     return run
 
 
-def _runner_segment_matmul(idx_size, num_segments, feat, interpret, seed):
+def _runner_segment_matmul(idx_size, num_segments, feat, interpret, seed,
+                           dtype=np.float32):
     import jax.numpy as jnp
 
     from repro.kernels import ops as kops
@@ -238,8 +260,8 @@ def _runner_segment_matmul(idx_size, num_segments, feat, interpret, seed):
     e = max(num_segments, 1)
     sizes = np.full((e,), idx_size // e, np.int32)
     sizes[: idx_size - int(sizes.sum())] += 1
-    x = jnp.asarray(rng.standard_normal((idx_size, feat)).astype(np.float32))
-    w = jnp.asarray(rng.standard_normal((e, feat, feat)).astype(np.float32))
+    x = _cast(rng.standard_normal((idx_size, feat)).astype(np.float32), dtype)
+    w = _cast(rng.standard_normal((e, feat, feat)).astype(np.float32), dtype)
     gs = jnp.asarray(sizes)
 
     def run(cfg: KernelConfig):
@@ -248,14 +270,15 @@ def _runner_segment_matmul(idx_size, num_segments, feat, interpret, seed):
     return run
 
 
-def _runner_sddmm(idx_size, num_segments, feat, interpret, seed):
+def _runner_sddmm(idx_size, num_segments, feat, interpret, seed,
+                  dtype=np.float32):
     import jax.numpy as jnp
 
     from repro.kernels import ops as kops
     rng = np.random.default_rng(seed)
     r = max(num_segments, 1)
-    a = jnp.asarray(rng.standard_normal((r, feat)).astype(np.float32))
-    b = jnp.asarray(rng.standard_normal((r, feat)).astype(np.float32))
+    a = _cast(rng.standard_normal((r, feat)).astype(np.float32), dtype)
+    b = _cast(rng.standard_normal((r, feat)).astype(np.float32), dtype)
     row = jnp.asarray(rng.integers(0, r, size=idx_size).astype(np.int32))
     col = jnp.asarray(rng.integers(0, r, size=idx_size).astype(np.int32))
 
@@ -266,7 +289,7 @@ def _runner_sddmm(idx_size, num_segments, feat, interpret, seed):
 
 
 def _runner_grouped_segment_matmul(idx_size, num_segments, feat, interpret,
-                                   seed):
+                                   seed, dtype=np.float32):
     """The typed-edge profile of the grouped GEMM: zipf-skewed group sizes
     (most relations tiny, a few dominant — empty groups included), unlike
     :func:`_runner_segment_matmul`'s balanced MoE split. Same kernel,
@@ -279,13 +302,36 @@ def _runner_grouped_segment_matmul(idx_size, num_segments, feat, interpret,
     w_rel = np.minimum(rng.zipf(1.2, size=e).astype(np.float64),
                        max(idx_size / 2.0, 1.0))
     sizes = rng.multinomial(idx_size, w_rel / w_rel.sum()).astype(np.int32)
-    x = jnp.asarray(rng.standard_normal((idx_size, feat)).astype(np.float32))
-    w = jnp.asarray(rng.standard_normal((e, feat, feat)).astype(np.float32))
+    x = _cast(rng.standard_normal((idx_size, feat)).astype(np.float32), dtype)
+    w = _cast(rng.standard_normal((e, feat, feat)).astype(np.float32), dtype)
     gs = jnp.asarray(sizes)
 
     def run(cfg: KernelConfig):
         return lambda: kops.segment_matmul(x, gs, w, config=cfg,
                                            interpret=interpret)
+    return run
+
+
+def _runner_fused_transform_reduce(idx_size, num_segments, feat, interpret,
+                                   seed, dtype=np.float32):
+    """The one-launch SpMM+GEMM: gather → in-kernel (d_in, d_out) transform →
+    reduce. Swept with a square weight (d_out = feat) like the matmul
+    runners."""
+    import jax.numpy as jnp
+
+    from repro.kernels import ops as kops
+    rng, seg, _ = _synth(idx_size, num_segments, feat, seed)
+    h = _cast(rng.standard_normal(
+        (max(num_segments, 1), feat)).astype(np.float32), dtype)
+    w = _cast(rng.standard_normal((feat, feat)).astype(np.float32), dtype)
+    gather_idx = jnp.asarray(rng.integers(
+        0, max(num_segments, 1), size=idx_size).astype(np.int32))
+    segj = jnp.asarray(seg)
+
+    def run(cfg: KernelConfig):
+        return lambda: kops.fused_transform_reduce(
+            h, w, gather_idx, segj, num_segments, reduce="sum",
+            config=cfg, interpret=interpret)
     return run
 
 
@@ -300,6 +346,7 @@ _OPS: Dict[str, Callable] = {
     "segment_matmul": _runner_segment_matmul,
     "grouped_segment_matmul": _runner_grouped_segment_matmul,
     "sddmm": _runner_sddmm,
+    "fused_transform_reduce": _runner_fused_transform_reduce,
 }
 
 # ops that consume only a projection of the config sweep the projected space
@@ -317,6 +364,10 @@ def config_projection(op: str, cfg: KernelConfig) -> Tuple:
     if op == "gather_segment_reduce_max":
         # max forces the SR walk, so PR lattice points alias their SR twin
         return ("SR", cfg.s_b, cfg.n_b, cfg.m_b, 1)
+    if op == "fused_transform_reduce":
+        # stages full-width d_in rows (no N_b feature tiling) and always
+        # accumulates via the full one-hot matmul; only ⟨S_b, M_b⟩ matter
+        return ("fused", cfg.s_b, cfg.m_b)
     return cfg.astuple()
 
 
@@ -421,7 +472,7 @@ def tune(op: str = "segment_reduce", *, idx_size: int, num_segments: int,
          max_configs: Optional[int] = None, reps: Optional[int] = None,
          warmup: Optional[int] = None, interpret: Optional[bool] = None,
          extra_configs: Sequence[KernelConfig] = (), force: bool = False,
-         seed: int = DEFAULT_SEED,
+         seed: int = DEFAULT_SEED, io_dtype: str = "float32",
          measure_fn: Optional[Callable[[KernelConfig], float]] = None,
          ) -> TuneResult:
     """Measure the pruned config lattice for one (op, shape class); cache.
@@ -445,7 +496,9 @@ def tune(op: str = "segment_reduce", *, idx_size: int, num_segments: int,
         interpret = _default_interpret()
     if interpret and backend != "cpu":
         backend += "+interp"        # never serve interpret sweeps to Mosaic
-    feats = InputFeatures(int(idx_size), int(num_segments), int(feat))
+    from repro.core.config_space import io_dtype_bytes
+    feats = InputFeatures(int(idx_size), int(num_segments), int(feat),
+                          dtype_bytes=io_dtype_bytes(io_dtype))
     key = perf_key(backend, op, feats)
     if db is None:
         # one parsed snapshot per path for the life of the process — a
@@ -468,7 +521,7 @@ def tune(op: str = "segment_reduce", *, idx_size: int, num_segments: int,
                         max_configs, extra_configs)
     if measure_fn is None:
         run = _OPS[op](int(idx_size), int(num_segments), int(feat),
-                       interpret, seed)
+                       interpret, seed, dtype=io_dtype)
 
         def measure_fn(cfg: KernelConfig) -> float:
             return _median_us(run(cfg), reps, warmup)
@@ -485,6 +538,7 @@ def tune(op: str = "segment_reduce", *, idx_size: int, num_segments: int,
         "idx_size": int(idx_size),
         "num_segments": int(num_segments),
         "feat": int(feat),
+        "io_dtype": io_dtype,
         "reps": reps,
         "warmup": warmup,
         "seed": seed,

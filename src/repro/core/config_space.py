@@ -23,6 +23,43 @@ VMEM_BYTES = 16 * 1024 * 1024          # v5e VMEM per core
 LANES = 128                            # vector register lanes
 SUBLANES = 8                           # vector register sublanes (fp32)
 
+# --- io dtype axis -----------------------------------------------------------
+# The kernels carry an *io dtype* (the dtype of x / weights / outputs in HBM)
+# orthogonal to the accumulator dtype, which is always fp32. Lowering the io
+# dtype halves the bytes per row-DMA on the bandwidth-bound gather/scatter
+# stages — the paper's segment reduces are bandwidth-bound (§IV), so io dtype
+# is a first-class tuning axis next to the tile sizes.
+IO_DTYPES = ("float32", "bfloat16")
+
+_DTYPE_BYTES = {"float32": 4, "bfloat16": 2, "float16": 2}
+
+
+def _io_dtype_name(dtype) -> str:
+    name = getattr(dtype, "name", None)
+    if isinstance(name, str):
+        return name
+    import numpy as np
+    try:
+        return np.dtype(dtype).name     # handles type classes (jnp.float32)
+    except TypeError:
+        return str(dtype)
+
+
+def io_dtype_bytes(dtype) -> int:
+    """Bytes per element of an io dtype (name, np.dtype, jax dtype, or
+    scalar type class)."""
+    name = _io_dtype_name(dtype)
+    try:
+        return _DTYPE_BYTES[name]
+    except KeyError:
+        import numpy as np
+        return int(np.dtype(name).itemsize)
+
+
+def canonical_io_dtype(dtype) -> str:
+    """Canonical string name for the io dtype axis ('float32', 'bfloat16')."""
+    return _io_dtype_name(dtype)
+
 
 @dataclasses.dataclass(frozen=True)
 class KernelConfig:
@@ -62,6 +99,7 @@ OP_KEYS = (
     "segment_matmul",
     "grouped_segment_matmul",
     "sddmm",
+    "fused_transform_reduce",
 )
 
 # Pruned candidate ranges (paper §III-C prunes to constant space; ours are

@@ -142,3 +142,48 @@ def spmm_cost(m: int, s: int, n: int, cfg: KernelConfig,
     return CostBreakdown(base.compute_s + mul_s,
                          base.memory_s + gather_bytes / spec.hbm_bw,
                          base.overhead_s)
+
+
+def dense_matmul_cost(rows: int, d_in: int, d_out: int,
+                      dtype_bytes: int = 4,
+                      spec: TpuSpec = V5E) -> CostBreakdown:
+    """Plain (rows, d_in) @ (d_in, d_out) on the MXU — the dense half of the
+    two-launch ``mp_transform`` orders (X@W transforms |V| rows, Agg(X)@W
+    transforms |S| rows). Needed once the fused arm joins the comparison:
+    the dense matmul no longer cancels between the candidates."""
+    din = max(d_in, LANES)
+    dout = max(d_out, LANES)
+    bytes_ = (rows * din + din * dout + rows * dout) * dtype_bytes
+    peak = spec.peak_flops_bf16 if dtype_bytes == 2 else spec.peak_flops_fp32
+    compute_s = 2.0 * rows * din * dout / peak
+    steps = _ceil(rows, 128) * _ceil(dout, 128)
+    return CostBreakdown(compute_s, bytes_ / spec.hbm_bw,
+                         steps * spec.grid_step_overhead)
+
+
+def fused_transform_reduce_cost(m: int, s: int, d_in: int, d_out: int,
+                                cfg: KernelConfig, dtype_bytes: int = 4,
+                                spec: TpuSpec = V5E,
+                                skew: float = 1.0) -> CostBreakdown:
+    """One-launch SpMM+GEMM (:mod:`repro.kernels.fused_transform_reduce`).
+
+    Aggregates at full d_in width with **no feature tiling** (each input row
+    is gathered exactly once — the width-tiled gather kernel re-reads rows
+    ``n_tiles`` times) and runs the dense transform in-kernel against the
+    VMEM-resident W, so the (S, d_in) aggregate never round-trips HBM: the
+    two-launch aggregate-first path pays ``2·S·d_in·bytes`` (write + re-read)
+    plus a second launch's grid overhead that this arm simply does not have."""
+    din = max(d_in, LANES)
+    dout = max(d_out, LANES)
+    # aggregation at full width — n_b covers d_in, so n_tiles == 1
+    wide = dataclasses.replace(cfg, n_b=_ceil(din, LANES) * LANES)
+    base = spmm_cost(m, s, d_in, wide, dtype_bytes, spec, skew=skew)
+    # in-kernel GEMM: one (S_b, d_in)·(d_in, d_out) per out-block
+    peak = spec.peak_flops_bf16 if dtype_bytes == 2 else spec.peak_flops_fp32
+    gemm_s = 2.0 * s * din * dout / peak
+    # W is DMA'd once (constant index map); output is (S, d_out) instead of
+    # the (S, d_in) the aggregation-only model charged
+    extra_bytes = din * dout * dtype_bytes + s * (dout - din) * dtype_bytes
+    return CostBreakdown(base.compute_s + gemm_s,
+                         base.memory_s + max(extra_bytes, 0) / spec.hbm_bw,
+                         base.overhead_s)

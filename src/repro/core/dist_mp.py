@@ -172,10 +172,14 @@ def mp_transform_sharded(x, w, pg, *, reduce: str = "sum", edge_weight=None,
     fused per shard. Non-linear reduces (``max``) pin transform-first
     (one shared resolver with ``mp_transform``: :func:`.mp.resolve_order`)."""
     from repro.core.mp import resolve_order
+    # allow_fused=False: the one-launch SpMM+GEMM arm is single-device only —
+    # the sharded reduce's collective merge (psum of partial aggregates /
+    # mean counts) must happen *between* aggregate and transform, so the
+    # per-shard (S, d_in) partials have to surface
     order = resolve_order(reduce, order, int(x.shape[-1]),
                           int(w.shape[-1]), plan=pplan,
                           num_edges=pg.num_edges, num_nodes=pg.num_nodes,
-                          config=config)
+                          config=config, allow_fused=False)
     kw = dict(reduce=reduce, edge_weight=edge_weight, pplan=pplan, mesh=mesh,
               impl=impl, config=config, collective=collective,
               axis_name=axis_name)

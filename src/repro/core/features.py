@@ -14,6 +14,10 @@ class InputFeatures:
     idx_size: int        # M = |E|
     idx_max: int         # ≈ number of live segments (last element + 1)
     feat: int            # F = N
+    dtype_bytes: int = 4  # io dtype width (4 = fp32, 2 = bf16); NOT part of
+                          # as_vector() — the generated decision tree is
+                          # trained on the 3-D shape vector, dtype selects a
+                          # separate PerfDB shelf via perf_key instead.
 
     @property
     def avg(self) -> float:
@@ -24,7 +28,8 @@ class InputFeatures:
         """Feature vector for the decision tree: log-scaled sizes + avg + F.
 
         Log scaling matches the orders-of-magnitude spread across graph
-        datasets (Table II spans 9K → 23M edges)."""
+        datasets (Table II spans 9K → 23M edges). Deliberately excludes
+        dtype_bytes — see the field comment."""
         return np.array([
             np.log2(max(self.idx_size, 1)),
             np.log2(max(self.avg, 2 ** -4)),
@@ -36,8 +41,9 @@ class InputFeatures:
         return ["log2_idx_size", "log2_avg", "log2_feat"]
 
 
-def extract_features(idx, feat: int) -> InputFeatures:
+def extract_features(idx, feat: int, dtype_bytes: int = 4) -> InputFeatures:
     """idx must be sorted non-decreasing; max is O(1) (last element)."""
     idx = np.asarray(idx)
     idx_max = int(idx[-1]) + 1 if idx.size else 1
-    return InputFeatures(idx_size=int(idx.size), idx_max=idx_max, feat=int(feat))
+    return InputFeatures(idx_size=int(idx.size), idx_max=idx_max,
+                         feat=int(feat), dtype_bytes=int(dtype_bytes))

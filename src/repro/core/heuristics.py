@@ -23,21 +23,24 @@ except ImportError:  # pragma: no cover
 
 def select_config(idx_size: int, num_segments: int, feat: int, *,
                   op: str = "segment_reduce", tune: "bool | None" = None,
-                  db=None) -> KernelConfig:
+                  db=None, io_dtype: str = "float32") -> KernelConfig:
     """Pick ⟨schedule, S_b, N_b, M_b, K_c⟩ from O(1) features.
 
     ``tune=None`` defers to the ``REPRO_AUTOTUNE`` env var; ``tune=True``
     engages the measured tier explicitly (sweeping once per shape class,
     cached in the :class:`~repro.core.autotune.PerfDB` thereafter);
     ``tune=False`` pins the selection to the generated rules. ``db`` is an
-    optional explicit PerfDB (tests / hermetic CI)."""
+    optional explicit PerfDB (tests / hermetic CI). ``io_dtype`` selects the
+    precision shelf of the measured tier — lowered-precision kernels have
+    different bandwidth/compute balance, so bf16 sweeps are cached under
+    their own PerfDB keys; the rule tiers are dtype-blind."""
     if op not in OP_KEYS:
         raise ValueError(f"unknown op {op!r}; registered: {OP_KEYS}")
     if tune is None:
         from repro.core.autotune import autotune_enabled
         tune = autotune_enabled()
     if tune:
-        cfg = _tuned_config(op, idx_size, num_segments, feat, db)
+        cfg = _tuned_config(op, idx_size, num_segments, feat, db, io_dtype)
         if cfg is not None:
             return cfg
     if _generated_rules is None:
@@ -50,14 +53,14 @@ def select_config(idx_size: int, num_segments: int, feat: int, *,
 
 
 def _tuned_config(op: str, idx_size: int, num_segments: int, feat: int,
-                  db) -> "KernelConfig | None":
+                  db, io_dtype: str = "float32") -> "KernelConfig | None":
     """Measured tier: tune-or-lookup; never let a measurement failure take
     down selection — fall through to the rule tiers instead."""
     from repro.core import autotune
     try:
         return autotune.tune(op=op, idx_size=int(idx_size),
                              num_segments=int(num_segments), feat=int(feat),
-                             db=db).config
+                             db=db, io_dtype=io_dtype).config
     except Exception as exc:  # pragma: no cover - defensive
         warnings.warn(f"autotune failed for op={op!r} ({exc!r}); "
                       "falling back to generated rules", RuntimeWarning)

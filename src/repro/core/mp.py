@@ -10,16 +10,22 @@ Two entry points:
   (|E|, F) message tensor never materializes).
 
 * :func:`mp_transform` — message passing composed with a dense transform
-  ``W``, with the classic GCN **transform/aggregate reordering** applied
-  per layer:
+  ``W``, with a **three-way** schedule decision applied per layer:
 
       aggregate(X) @ W        (aggregate-first)   SpMM width = d_in
       aggregate(X @ W)        (transform-first)   SpMM width = d_out
+      fused(X, W)             (fused)             SpMM+GEMM, ONE launch
 
-  The dense matmul costs |V|·d_in·d_out either way; only the SpMM width
-  changes, so aggregate-first wins when d_in < d_out (both rounded up to
-  the 128-lane tile) and vice versa. :func:`choose_order` decides from the
-  v5e cost model (:func:`repro.core.costmodel.spmm_cost`) fed with the
+  The two launch orders differ in SpMM width (aggregate-first wins when
+  d_in < d_out, both rounded up to the 128-lane tile). The ``fused`` arm
+  (:mod:`repro.kernels.fused_transform_reduce`) runs the dense transform
+  *inside* the gather-reduce launch: the (S, d_in) aggregate never
+  round-trips HBM and the second launch's overhead disappears — available
+  on the ``pallas`` path for linear reduces whose (d_in, d_out) weight
+  tile fits VMEM (:func:`repro.kernels.fused_transform_reduce.fusable`).
+  :func:`choose_order` decides from the v5e cost model
+  (:func:`repro.core.costmodel.spmm_cost` /
+  :func:`repro.core.costmodel.fused_transform_reduce_cost`) fed with the
   plan's degree statistics (skew inflates the heaviest block's chunk
   count). Reordering is only valid for *linear* reduces (sum / mean,
   weighted or not — they commute with ``W``); ``max`` pins transform-first.
@@ -44,24 +50,35 @@ _LINEAR_REDUCES = ("sum", "mean")
 
 def resolve_order(reduce: str, order: str, d_in: int, d_out: int, *,
                   plan=None, num_edges=None, num_nodes=None,
-                  config=None) -> str:
+                  config=None, allow_fused: bool = False,
+                  dtype=None) -> str:
     """Validate and resolve the transform/aggregate order for one layer —
     the single source of truth shared by :func:`mp_transform` and the
     sharded :func:`repro.core.dist_mp.mp_transform_sharded`.
 
     Non-linear reduces do not commute with ``W`` and pin transform-first;
-    ``"auto"`` asks the cost model (:func:`choose_order`)."""
-    if order not in ("auto", "aggregate_first", "transform_first"):
+    ``"auto"`` asks the cost model (:func:`choose_order`). ``allow_fused``
+    admits the one-launch SpMM+GEMM arm (the pallas single-device path sets
+    it; the sharded path keeps it False — its collective merge sits
+    *between* aggregate and transform, so per-shard partial aggregates
+    must surface). An explicit ``order="fused"`` still requires a linear
+    reduce and an ``allow_fused`` caller."""
+    if order not in ("auto", "aggregate_first", "transform_first", "fused"):
         raise ValueError(f"unknown order: {order!r}")
     if reduce not in _LINEAR_REDUCES:
-        if order == "aggregate_first":
+        if order in ("aggregate_first", "fused"):
             raise ValueError(
                 f"reduce={reduce!r} does not commute with the transform; "
-                "aggregate_first would compute a different function")
+                f"{order} would compute a different function")
         return "transform_first"
+    if order == "fused" and not allow_fused:
+        raise ValueError(
+            "order='fused' needs the one-launch pallas path "
+            "(impl='pallas', single device)")
     if order == "auto":
         return choose_order(d_in, d_out, plan=plan, num_edges=num_edges,
-                            num_nodes=num_nodes, config=config)
+                            num_nodes=num_nodes, config=config,
+                            allow_fused=allow_fused, dtype=dtype)
     return order
 
 
@@ -154,15 +171,20 @@ def mp_typed(x, w, edge_index, edge_type, num_nodes: int, *,
 def choose_order(d_in: int, d_out: int, *, plan=None,
                  num_edges: Optional[int] = None,
                  num_nodes: Optional[int] = None,
-                 config: Optional[KernelConfig] = None) -> str:
-    """FLOP/roofline decision: ``"aggregate_first"`` or
-    ``"transform_first"``.
+                 config: Optional[KernelConfig] = None,
+                 allow_fused: bool = False, dtype=None) -> str:
+    """FLOP/roofline decision: ``"aggregate_first"``, ``"transform_first"``
+    or (when ``allow_fused``) ``"fused"``.
 
-    Compares the modelled SpMM cost at width ``d_in`` (aggregate-first) vs
-    ``d_out`` (transform-first); the |V|·d_in·d_out dense matmul is common
-    to both orders and cancels. With a ``plan``, |E|, |V|, the selected
-    config, and the degree skew all come from its precomputed statistics;
-    otherwise ``num_edges``/``num_nodes`` must be given."""
+    Two-launch orders differ in SpMM width (``d_in`` vs ``d_out``); with
+    the fused arm in the race the |V|·d_in·d_out dense matmul no longer
+    cancels, so each candidate is costed end to end — the fused arm skips
+    the (S, d_in) HBM round-trip and the second launch entirely, but only
+    qualifies when its VMEM working set fits
+    (:func:`repro.kernels.fused_transform_reduce.fusable` at ``dtype``).
+    With a ``plan``, |E|, |V|, the selected config, and the degree skew all
+    come from its precomputed statistics; otherwise
+    ``num_edges``/``num_nodes`` must be given."""
     from repro.core import costmodel
 
     if plan is not None:
@@ -178,24 +200,50 @@ def choose_order(d_in: int, d_out: int, *, plan=None,
     if cfg is None:
         from repro.core.heuristics import select_config
         cfg = select_config(max(m, 1), max(s, 1), max(d_in, d_out))
-    t_agg_first = costmodel.spmm_cost(m, s, d_in, cfg, skew=skew).total_s
-    t_tr_first = costmodel.spmm_cost(m, s, d_out, cfg, skew=skew).total_s
-    return "aggregate_first" if t_agg_first < t_tr_first else "transform_first"
+    from repro.core.config_space import io_dtype_bytes
+    db = io_dtype_bytes(dtype) if dtype is not None else 4
+    dense = costmodel.dense_matmul_cost(s, d_in, d_out, db).total_s
+    # insertion order is the tie-break (min keeps the first minimum):
+    # transform-first is the conventional order, aggregate-first must beat
+    # it strictly, and the fused arm must beat both strictly
+    t = {
+        "transform_first":
+            costmodel.spmm_cost(m, s, d_out, cfg, db, skew=skew).total_s
+            + dense,
+        "aggregate_first":
+            costmodel.spmm_cost(m, s, d_in, cfg, db, skew=skew).total_s
+            + dense,
+    }
+    if allow_fused:
+        from repro.kernels.fused_transform_reduce import fusable
+        if fusable(d_in, d_out, dtype or "float32", cfg):
+            t["fused"] = costmodel.fused_transform_reduce_cost(
+                m, s, d_in, d_out, cfg, db, skew=skew).total_s
+    return min(t, key=t.get)
 
 
 def mp_transform(x, w, edge_index, num_nodes: int, *, reduce: str = "sum",
                  edge_weight=None, plan=None, impl: str = "ref",
                  config: Optional[KernelConfig] = None, order: str = "auto"):
-    """Message passing fused with a dense transform: aggregate(X·W) or
-    aggregate(X)·W, whichever the cost model prefers (``order="auto"``).
+    """Message passing fused with a dense transform: aggregate(X·W),
+    aggregate(X)·W, or the one-launch fused SpMM+GEMM, whichever the cost
+    model prefers (``order="auto"``).
 
-    ``order`` ∈ {"auto", "aggregate_first", "transform_first"} — pin it for
-    ablation benchmarks. Non-linear reduces (``max``) do not commute with
-    ``W`` and always run transform-first."""
+    ``order`` ∈ {"auto", "aggregate_first", "transform_first", "fused"} —
+    pin it for ablation benchmarks (``"fused"`` needs ``impl="pallas"``
+    and a linear reduce; an unfusable explicit pin raises from the
+    kernel's VMEM check). Non-linear reduces (``max``) do not commute
+    with ``W`` and always run transform-first."""
     order = resolve_order(reduce, order, int(x.shape[-1]),
                           int(w.shape[-1]), plan=plan,
                           num_edges=int(edge_index.shape[-1]),
-                          num_nodes=num_nodes, config=config)
+                          num_nodes=num_nodes, config=config,
+                          allow_fused=(impl == "pallas"), dtype=x.dtype)
+    if order == "fused":
+        src, dst = edge_index[0], edge_index[1]
+        return geot.fused_transform_reduce(x, w, src, edge_weight, dst,
+                                           num_nodes, reduce, impl, config,
+                                           plan)
     if order == "aggregate_first":
         agg = mp(x, edge_index, num_nodes, reduce=reduce,
                  edge_weight=edge_weight, plan=plan, impl=impl, config=config)

@@ -34,12 +34,29 @@ __all__ = [
     "segment_reduce",
     "index_segment_reduce",
     "index_weight_segment_reduce",
+    "fused_transform_reduce",
     "segment_softmax",
     "segment_matmul",
     "grouped_segment_matmul",
     "sddmm",
     "gather",
 ]
+
+# Precision contract (the dtype axis, docs/message_passing.md §Precision):
+# every op carries its inputs' io dtype end-to-end — bf16 in, bf16 out —
+# while all reductions accumulate in fp32 (kernel accumulators/scratch and
+# the jnp reference paths alike). The custom VJPs follow the same rule:
+# gradient scatter-adds and segment-sums run in fp32 and the finished
+# cotangent is cast back to the primal's dtype (:func:`_accum_cast`).
+
+
+def _f32(a):
+    return a.astype(jnp.float32)
+
+
+def _accum_cast(acc, like):
+    """Cast an fp32 gradient accumulation back to the primal's io dtype."""
+    return acc.astype(like.dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -270,11 +287,12 @@ def _gather_fwd(h, idx):
 
 def _gather_bwd(res, g):
     idx, num_rows = res
-    # sort-then-segment-reduce: GeoT's own primitive implements its VJP
+    # sort-then-segment-reduce: GeoT's own primitive implements its VJP;
+    # the scatter-add accumulates fp32 and casts back to the io dtype
     order = jnp.argsort(idx)
-    dh = _segment_reduce_ref(jnp.take(g, order, axis=0),
+    dh = _segment_reduce_ref(_f32(jnp.take(g, order, axis=0)),
                              jnp.take(idx, order), num_rows, "sum")
-    return (dh, None)
+    return (_accum_cast(dh, g), None)
 
 
 _gather.defvjp(_gather_fwd, _gather_bwd)
@@ -327,8 +345,8 @@ def _isr_bwd(num_segments, reduce, impl, config, tune, res, y_bar):
         winner = (msg == _take0(y, seg_idx)).astype(y_bar.dtype)
         g_edges = winner * _take0(
             _split_ties(y_bar, winner, seg_idx, num_segments), seg_idx)
-    dh = jnp.zeros_like(h).at[gather_idx].add(g_edges)
-    return (dh, None, None, None)
+    dh = jnp.zeros(h.shape, jnp.float32).at[gather_idx].add(_f32(g_edges))
+    return (_accum_cast(dh, h), None, None, None)
 
 
 index_segment_reduce.defvjp(_isr_fwd, _isr_bwd)
@@ -396,15 +414,97 @@ def _iwsr_bwd(num_segments, reduce, impl, config, tune, res, y_bar):
         winner = (msg == _take0(y, seg_idx)).astype(y_bar.dtype)
         g_msg = winner * _take0(
             _split_ties(y_bar, winner, seg_idx, num_segments), seg_idx)
-    dh = jnp.zeros_like(h).at[gather_idx].add(
-        g_msg * weight[:, None].astype(y_bar.dtype))
+    dh = jnp.zeros(h.shape, jnp.float32).at[gather_idx].add(
+        _f32(g_msg) * _f32(weight)[:, None])
     # dW = SDDMM: per-edge dot of gathered rows (paper §VI)
-    dw = jnp.sum(jnp.take(h, gather_idx, axis=0).astype(y_bar.dtype) * g_msg,
+    dw = jnp.sum(_f32(jnp.take(h, gather_idx, axis=0)) * _f32(g_msg),
                  axis=-1).astype(weight.dtype)
-    return (dh, None, dw, None, None)
+    return (_accum_cast(dh, h), None, dw, None, None)
 
 
 index_weight_segment_reduce.defvjp(_iwsr_fwd, _iwsr_bwd)
+
+
+def _ftr_aggregate(h, gather_idx, weight, seg_idx, num_segments, reduce,
+                   impl, config, plan, tune):
+    """The Agg(H) half of the fused op (recomputed by the backward for dW):
+    plain or weighted gather-reduce through the existing dispatchers."""
+    if weight is None:
+        return index_segment_reduce(h, gather_idx, seg_idx, num_segments,
+                                    reduce, impl, config, plan, tune)
+    return index_weight_segment_reduce(h, gather_idx, weight, seg_idx,
+                                       num_segments, reduce, impl, config,
+                                       plan, tune)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8, 10))
+def fused_transform_reduce(h, w, gather_idx, weight, seg_idx,
+                           num_segments: int, reduce: str = "sum",
+                           impl: str = "ref",
+                           config: Optional[KernelConfig] = None, plan=None,
+                           tune: Optional[bool] = None):
+    """Fully-fused transform-aggregate (SpMM+GEMM in one launch):
+
+        Y[s] = ( reduce_{i: seg_idx[i]==s} w_e[i] · H[gather_idx[i]] ) @ W
+
+    Linear reduces only (sum / mean) — the dense transform distributes over
+    the reduction, which is what lets ``impl="pallas"`` aggregate at width
+    d_in and transform per output block inside one kernel
+    (:mod:`repro.kernels.fused_transform_reduce`) without ever
+    materializing the (|E|, d) edge tensor or the (S, d_in) aggregate.
+    ``weight=None`` for the unweighted form. Differentiable in H, W, and
+    weight; gradients accumulate fp32 and are cast back to the io dtype:
+
+        dW = Agg(H)ᵀ @ Ȳ            (one recomputed aggregation launch)
+        dH = scatter-add of w_e[i] · (Ȳ @ Wᵀ)[seg_idx[i]]
+        dw_e[i] = <H[gather_idx[i]], (Ȳ @ Wᵀ)[seg_idx[i]]>   (SDDMM)
+    """
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        return kops.fused_transform_reduce(h, w, gather_idx, seg_idx,
+                                           num_segments, weight=weight,
+                                           reduce=reduce, config=config,
+                                           plan=plan, tune=tune)
+    _account_unfused(f"fused_transform_reduce_{reduce}:{impl}")
+    agg = _ftr_aggregate(h, gather_idx, weight, seg_idx, num_segments,
+                         reduce, impl, config, plan, tune)
+    return jnp.dot(agg, w, preferred_element_type=jnp.float32).astype(h.dtype)
+
+
+def _ftr_fwd(h, w, gather_idx, weight, seg_idx, num_segments, reduce, impl,
+             config, plan=None, tune=None):
+    y = fused_transform_reduce(h, w, gather_idx, weight, seg_idx,
+                               num_segments, reduce, impl, config, plan, tune)
+    return y, (h, w, gather_idx, weight, seg_idx, plan)
+
+
+def _ftr_bwd(num_segments, reduce, impl, config, tune, res, y_bar):
+    h, w, gather_idx, weight, seg_idx, plan = res
+    # dW: recompute the (S, d_in) aggregate (one launch — the forward never
+    # materialized it, that's the point) and contract fp32 against Ȳ
+    agg = _ftr_aggregate(h, gather_idx, weight, seg_idx, num_segments,
+                         reduce, impl, config, plan, tune)
+    dw = jnp.dot(_f32(agg).T, _f32(y_bar)).astype(w.dtype)
+    # route Ȳ back through the transform, then through the aggregation
+    g = jnp.dot(_f32(y_bar), _f32(w).T)                  # (S, d_in) fp32
+    if reduce == "mean":
+        cnt = jax.ops.segment_sum(
+            jnp.ones_like(seg_idx, dtype=jnp.float32), seg_idx, num_segments,
+            indices_are_sorted=True)
+        g = g / jnp.maximum(cnt, 1.0)[:, None]
+    g_edges = _take0(g, seg_idx)                         # (E, d_in) fp32
+    wt_f32 = None if weight is None else _f32(weight)
+    scaled = g_edges if weight is None else g_edges * wt_f32[:, None]
+    dh = _accum_cast(
+        jnp.zeros(h.shape, jnp.float32).at[gather_idx].add(scaled), h)
+    dwt = None
+    if weight is not None:
+        dwt = jnp.sum(_f32(jnp.take(h, gather_idx, axis=0)) * g_edges,
+                      axis=-1).astype(weight.dtype)
+    return (dh, dw, None, dwt, None, None)
+
+
+fused_transform_reduce.defvjp(_ftr_fwd, _ftr_bwd)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 7))
@@ -434,12 +534,13 @@ def _sddmm_fwd(h_out, h_in, row_idx, col_idx, impl, config, plan=None,
 
 def _sddmm_bwd(impl, config, tune, res, g):
     h_out, h_in, row_idx, col_idx = res
-    # d<a_r, b_c>/da_r = g·b_c and symmetrically for b: two scatter-adds
-    da = jnp.zeros_like(h_out).at[row_idx].add(
-        g[:, None].astype(h_out.dtype) * jnp.take(h_in, col_idx, axis=0))
-    db = jnp.zeros_like(h_in).at[col_idx].add(
-        g[:, None].astype(h_in.dtype) * jnp.take(h_out, row_idx, axis=0))
-    return (da, db, None, None, None)
+    # d<a_r, b_c>/da_r = g·b_c and symmetrically for b: two scatter-adds,
+    # fp32-accumulated and cast back to the operands' io dtype
+    da = jnp.zeros(h_out.shape, jnp.float32).at[row_idx].add(
+        _f32(g)[:, None] * _f32(jnp.take(h_in, col_idx, axis=0)))
+    db = jnp.zeros(h_in.shape, jnp.float32).at[col_idx].add(
+        _f32(g)[:, None] * _f32(jnp.take(h_out, row_idx, axis=0)))
+    return (_accum_cast(da, h_out), _accum_cast(db, h_in), None, None, None)
 
 
 sddmm.defvjp(_sddmm_fwd, _sddmm_bwd)
@@ -480,9 +581,11 @@ def _ssm_fwd(x, idx, num_segments, impl, config, plan=None, tune=None):
 
 def _ssm_bwd(num_segments, impl, config, tune, res, g):
     p, idx = res
-    # d softmax: p ⊙ (g − Σ_{segment} p·g), the per-segment Jacobian action
-    t = jax.ops.segment_sum(p * g, idx, num_segments, indices_are_sorted=True)
-    return (p * (g - _take0(t, idx)), None, None)
+    # d softmax: p ⊙ (g − Σ_{segment} p·g), the per-segment Jacobian action;
+    # the segment-sum and the Jacobian product run fp32, cast back after
+    t = jax.ops.segment_sum(_f32(p * g), idx, num_segments,
+                            indices_are_sorted=True)
+    return (_accum_cast(_f32(p) * (_f32(g) - _take0(t, idx)), p), None, None)
 
 
 segment_softmax.defvjp(_ssm_fwd, _ssm_bwd)
@@ -546,9 +649,9 @@ def _gsm_bwd(impl, config, tune, res, y_bar):
     rows = jnp.arange(m, dtype=jnp.int32)
     gid = jnp.clip(jnp.searchsorted(offsets, rows, side="right") - 1,
                    0, e - 1)
-    valid = (rows < offsets[-1]).astype(x.dtype)
-    outer = ((x * valid[:, None])[:, :, None] *
-             y_bar[:, None, :]).reshape(m, x.shape[1] * y_bar.shape[1])
+    valid = (rows < offsets[-1]).astype(jnp.float32)
+    outer = ((_f32(x) * valid[:, None])[:, :, None] *
+             _f32(y_bar)[:, None, :]).reshape(m, x.shape[1] * y_bar.shape[1])
     dw = jax.ops.segment_sum(outer, gid, e, indices_are_sorted=True)
     return (dx, None, dw.reshape(w.shape).astype(w.dtype), None)
 

@@ -219,7 +219,11 @@ def _gather_segment_reduce_impl(h, gather_idx, seg_idx, weight,
                     constant_values=v)               # padding gathers guard row
     idxp = jnp.pad(seg_idx.astype(jnp.int32), (0, m_pad - m),
                    constant_values=num_segments)
-    wp = jnp.pad(weight.astype(jnp.float32), (0, m_pad - m))
+    # weights stay in their io dtype through HBM/VMEM — upcasting happens
+    # inside the accumulator (SR walk) or via the MXU's fp32
+    # preferred_element_type (PR), so weighted bf16 reduces keep the
+    # half-bandwidth win on the weight stream too
+    wp = jnp.pad(weight, (0, m_pad - m))
     gidx2d = gidxp.reshape(m_pad // m_b, m_b)
     idx2d = idxp.reshape(m_pad // m_b, m_b)
     w2d = wp.reshape(m_pad // m_b, m_b)
@@ -303,7 +307,8 @@ def gather_segment_reduce_pallas(h, gather_idx, seg_idx, num_segments: int,
         config = KernelConfig("SR", config.s_b, config.n_b, config.m_b, 1)
     has_weight = weight is not None
     if weight is None:
-        weight = jnp.ones((gather_idx.shape[0],), jnp.float32)
+        # dummy ones ride the io dtype so the unused stream stays narrow
+        weight = jnp.ones((gather_idx.shape[0],), h.dtype)
     return _gather_segment_reduce_impl(h, gather_idx, seg_idx, weight,
                                        num_segments, config, max_chunks,
                                        interpret, has_weight, reduce, plan)

@@ -94,17 +94,22 @@ def fusion_scope():
 
 def _resolve_config(config: Optional[KernelConfig], plan, idx_size: int,
                     num_segments: int, feat: int, op: str,
-                    tune: Optional[bool] = None) -> Optional[KernelConfig]:
+                    tune: Optional[bool] = None,
+                    io_dtype=None) -> Optional[KernelConfig]:
     """Apply the selection precedence ahead of the jit boundary
     (plan > config > tune > heuristics).
 
     Returns None only when a plan carries the config (the kernel merges it
-    with the plan's chunk metadata via ``_resolve_plan``)."""
+    with the plan's chunk metadata via ``_resolve_plan``). ``io_dtype``
+    (a dtype or name) routes the measured tier to the right PerfDB
+    precision shelf."""
     if config is not None or plan is not None:
         return config
+    from repro.core.config_space import canonical_io_dtype
     from repro.core.heuristics import select_config
     return select_config(int(idx_size), int(num_segments), int(feat), op=op,
-                         tune=tune)
+                         tune=tune,
+                         io_dtype=canonical_io_dtype(io_dtype or "float32"))
 
 
 def segment_reduce(x, idx, num_segments: int, reduce: str = "sum",
@@ -114,7 +119,8 @@ def segment_reduce(x, idx, num_segments: int, reduce: str = "sum",
                    tune: Optional[bool] = None):
     interpret = _default_interpret() if interpret is None else interpret
     config = _resolve_config(config, plan, x.shape[0], num_segments,
-                             x.shape[-1], "segment_reduce", tune)
+                             x.shape[-1], "segment_reduce", tune,
+                             io_dtype=x.dtype)
     account("fused", f"segment_reduce_{reduce}")
     if reduce == "mean":
         # the non-gather mean pairs a fused sum launch with a jnp count
@@ -140,12 +146,40 @@ def gather_segment_reduce(h, gather_idx, seg_idx, num_segments: int,
     op = ("gather_segment_reduce" if reduce == "sum"
           else f"gather_segment_reduce_{reduce}")
     config = _resolve_config(config, plan, gather_idx.shape[0], num_segments,
-                             h.shape[-1], op, tune)
+                             h.shape[-1], op, tune, io_dtype=h.dtype)
     account("fused", op if weight is None else f"{op}_weighted")
     return gather_segment_reduce_pallas(h, gather_idx, seg_idx, num_segments,
                                         weight=weight, reduce=reduce,
                                         config=config, max_chunks=max_chunks,
                                         interpret=interpret, plan=plan)
+
+
+def fused_transform_reduce(h, w, gather_idx, seg_idx, num_segments: int,
+                           weight=None, reduce: str = "sum",
+                           config: Optional[KernelConfig] = None,
+                           max_chunks: Optional[int] = None,
+                           interpret: Optional[bool] = None, plan=None,
+                           tune: Optional[bool] = None):
+    """One-launch SpMM+GEMM: Y[s] = (reduce_{seg[i]==s} wt[i]·H[gidx[i]]) @ W
+    — the per-layer dense transform fused into the gather-reduce launch, so
+    neither the (|E|, d) edge tensor nor the (S, d_in) aggregate is ever
+    materialized. Linear reduces only (sum / mean)."""
+    if reduce not in ("sum", "mean"):
+        raise ValueError(f"unknown reduce: {reduce!r} "
+                         "(fused transform-reduce supports sum/mean)")
+    from repro.kernels.fused_transform_reduce import \
+        fused_transform_reduce_pallas
+    interpret = _default_interpret() if interpret is None else interpret
+    config = _resolve_config(config, plan, gather_idx.shape[0], num_segments,
+                             h.shape[-1], "fused_transform_reduce", tune,
+                             io_dtype=h.dtype)
+    account("fused", "fused_transform_reduce"
+            if weight is None else "fused_transform_reduce_weighted")
+    return fused_transform_reduce_pallas(h, w, gather_idx, seg_idx,
+                                         num_segments, weight=weight,
+                                         reduce=reduce, config=config,
+                                         max_chunks=max_chunks,
+                                         interpret=interpret, plan=plan)
 
 
 def segment_matmul(x, group_sizes, w, config: Optional[KernelConfig] = None,
@@ -219,7 +253,7 @@ def segment_softmax(x, idx, num_segments: int,
     interpret = _default_interpret() if interpret is None else interpret
     feat = int(x.shape[-1]) if x.ndim > 1 else 1
     config = _resolve_config(config, plan, idx.shape[0], num_segments, feat,
-                             "segment_softmax", tune)
+                             "segment_softmax", tune, io_dtype=x.dtype)
     account("fused", "segment_softmax")
     return segment_softmax_pallas(x, idx, num_segments, config=config,
                                   max_chunks=max_chunks, interpret=interpret,

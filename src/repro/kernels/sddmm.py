@@ -8,6 +8,13 @@ TPU mapping: grid over edge chunks; both operand rows are DMA-gathered into
 VMEM staging buffers (same per-row async-copy machinery as
 gather_segment_reduce), then the per-edge dot is an elementwise multiply +
 lane reduction on the VPU. No sortedness required (pure gather, no scatter).
+
+Precision contract: **fp32-accumulate / input-dtype-out.** The per-edge dot
+multiplies in fp32 and the feature-tile partials accumulate across the
+sequential ``j`` grid dim in an fp32 output buffer (a real running sum —
+unlike the grouped matmul's masked-disjoint accumulation it cannot be
+narrowed); the (M,) result is cast to ``a.dtype`` on the way out, so bf16
+operands get bf16 edge scores without ever accumulating in bf16.
 """
 from __future__ import annotations
 
@@ -58,7 +65,8 @@ def _body(ridx_ref, cidx_ref, a_ref, b_ref, o_ref, abuf_ref, bbuf_ref, sem,
 @functools.partial(jax.jit, static_argnames=("m_b", "n_b", "interpret"))
 def sddmm_pallas(a, b, row_idx, col_idx, m_b: int = 256, n_b: int = 512,
                  interpret: bool = False):
-    """a: (Ra, N); b: (Rb, N); row/col_idx: (M,) int32 → (M,) f32."""
+    """a: (Ra, N); b: (Rb, N); row/col_idx: (M,) int32 → (M,) a.dtype
+    (fp32-accumulated — see module docstring)."""
     m = row_idx.shape[0]
     n = a.shape[1]
     n_b = min(n_b, _round_up(max(n, 1), 128))
@@ -93,4 +101,4 @@ def sddmm_pallas(a, b, row_idx, col_idx, m_b: int = 256, n_b: int = 512,
         out_shape=jax.ShapeDtypeStruct((m_pad // m_b, m_b), jnp.float32),
         interpret=interpret,
     )(ridx, cidx, ap, bp)
-    return out.reshape(m_pad)[:m]
+    return out.reshape(m_pad)[:m].astype(a.dtype)

@@ -46,11 +46,15 @@ def _body(off_ref, fg_ref, gc_ref, x_ref, w_ref, o_ref, *, m_b: int):
         g = fg_ref[mb] + k
         rows = mb * m_b + jax.lax.broadcasted_iota(jnp.int32, (m_b, 1), 0)
         mask = jnp.logical_and(rows >= off_ref[g], rows < off_ref[g + 1])
-        xm = jnp.where(mask, x_ref[...], 0.0)
+        xm = jnp.where(mask, x_ref[...], jnp.zeros((), x_ref.dtype))
+        # fp32 MXU accumulate, io-dtype store: each output row is owned by
+        # exactly one group (foreign rows are masked to zero before the
+        # matmul), so the += across the group grid dim only ever adds zeros
+        # to already-written rows — storing in the io dtype loses nothing.
         o_ref[...] += jax.lax.dot_general(
             xm, w_ref[0],
             dimension_numbers=(((1,), (0,)), ((), ())),
-            preferred_element_type=o_ref.dtype).astype(o_ref.dtype)
+            preferred_element_type=jnp.float32).astype(o_ref.dtype)
 
 
 def group_metadata(group_sizes, num_rows: int, m_b: int):
@@ -139,10 +143,13 @@ def segment_matmul_pallas(x, group_sizes, w, m_b: int = 128,
         out_specs=pl.BlockSpec((m_b, n_b), o_map),
     )
 
+    # out buffer in the io dtype: bf16 grouped matmuls must not materialize
+    # a 2x-size fp32 intermediate (the MXU still accumulates fp32 per tile
+    # via preferred_element_type in the kernel body).
     out = pl.pallas_call(
         functools.partial(_body, m_b=m_b),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((m_pad, n_pad), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((m_pad, n_pad), x.dtype),
         interpret=interpret,
     )(offsets, fg, gc, xp, wp)
-    return out[:m, :n].astype(x.dtype)
+    return out[:m, :n]

@@ -118,7 +118,8 @@ def _softmax_body(cf_ref, cc_ref, idx_ref, x_ref, o_ref,
             mrow = m_ref[pl.ds(rc, 1), :]
             zrow = z_ref[pl.ds(rc, 1), :]
             obuf_ref[pl.ds(i, 1), :] = (jnp.exp(xrow - mrow)
-                                        / jnp.maximum(zrow, 1e-20))
+                                        / jnp.maximum(zrow, 1e-20)
+                                        ).astype(obuf_ref.dtype)
 
             @pl.when(in_win)
             def _():
@@ -154,7 +155,10 @@ def _segment_softmax_impl(x, idx, num_segments: int, config: KernelConfig,
     m_pad = _round_up(max(m, 1), m_b)
     s_pad = _round_up(num_segments, s_b)
 
-    xp = jnp.pad(x.astype(jnp.float32), ((0, m_pad - m), (0, h_pad - h)))
+    # logits stay in their io dtype through HBM — each row is upcast to the
+    # fp32 online-softmax accumulators only after it lands in VMEM, so bf16
+    # attention logits keep the half-bandwidth read (stats stay fp32)
+    xp = jnp.pad(x, ((0, m_pad - m), (0, h_pad - h)))
     idxp = jnp.pad(idx.astype(jnp.int32), (0, m_pad - m),
                    constant_values=num_segments)
     idx2d = idxp.reshape(m_pad // m_b, m_b)
@@ -187,15 +191,19 @@ def _segment_softmax_impl(x, idx, num_segments: int, config: KernelConfig,
             pltpu.VMEM((1, h_pad), jnp.float32),           # open-segment m
             pltpu.VMEM((1, h_pad), jnp.float32),           # open-segment z
             pltpu.SMEM((1,), jnp.int32),                   # open-segment rel
-            pltpu.VMEM((m_b, h_pad), jnp.float32),         # output chunk stage
+            pltpu.VMEM((m_b, h_pad), x.dtype),             # output chunk stage
             pltpu.SemaphoreType.DMA,
         ],
     )
+    # output rides the io dtype too (α ∈ [0, 1] — bf16 holds it to ~2^-8
+    # relative, inside the tiered tolerance): the stage buffer is cast right
+    # before its row DMA, halving the per-edge write *and* the weighted
+    # aggregation's subsequent read for bf16 logits
     out = pl.pallas_call(
         functools.partial(_softmax_body, s_b=s_b, m_b=m_b,
                           max_chunks=max_chunks),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((m_pad, h_pad), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((m_pad, h_pad), x.dtype),
         interpret=interpret,
     )(chunk_first, chunk_count, idx2d, xp)
     out = out[:m, :h]

@@ -14,8 +14,10 @@ and routes its aggregation through ``mp`` / ``mp_transform``: on the
 ``pallas`` path every reduce (sum / mean / max, weighted or not) and the
 GAT ``segment_softmax`` is a single fused plan-aware kernel, and layers
 whose aggregation commutes with their dense transform (GCN, SAGE's
-neighbour branch) let ``mp_transform`` reorder transform vs aggregate by
-the cost model (aggregate-first when d_in < d_out).
+neighbour branch) let ``mp_transform`` pick the layer schedule by the
+cost model — aggregate-first, transform-first, or (pallas, single
+device, VMEM permitting) the **fully-fused** one-launch SpMM+GEMM that
+never materializes the (S, d_in) aggregate.
 
 Passing ``partition=`` (a :class:`~repro.data.partition.PartitionedGraph`,
 with ``plan`` a matching :class:`~repro.core.plan.PartitionedPlan` and

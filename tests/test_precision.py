@@ -1,0 +1,368 @@
+"""Mixed-precision (io dtype) contract across the kernel stack.
+
+Every kernel carries its io dtype end to end — bf16 in ⇒ bf16 out — while
+accumulating in fp32 (kernel scratch, MXU preferred_element_type, and the
+custom-VJP scatter-adds). Parity is checked against the *cast-then-reduce*
+fp32 oracle (upcast the io-dtype inputs, reduce in fp32) at dtype-tiered
+tolerances:
+
+    fp32  ≤ 1e-5 relative   (same-precision accumulation, near-exact)
+    bf16  ≤ 2e-2 relative   (8-bit mantissa io, fp32 accumulate)
+
+Covers: all four reduce families (sum/mean/max × weighted) + softmax,
+mixed x-bf16/weight-fp32, bf16 grads and grads-of-grads through the custom
+VJPs, the fused transform-reduce (forward + grads), segment_matmul / sddmm
+dtype honoring, and the fused kernel's VMEM ``fusable`` gate. A hypothesis
+sweep (CI) fuzzes shapes × dtypes over the same oracle.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ops
+from repro.core.config_space import KernelConfig
+from repro.core.mp import choose_order, mp
+
+RNG = np.random.default_rng(31)
+CFG = KernelConfig("SR", 64, 128, 64, 1)
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _tol(dtype):
+    return (dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16
+            else dict(rtol=1e-5, atol=1e-5))
+
+
+def _graph(v=70, e=340, f=12, seed=0):
+    rng = np.random.default_rng(seed)
+    dst = np.sort(rng.integers(0, v, e)).astype(np.int32)
+    src = rng.integers(0, v, e).astype(np.int32)
+    x32 = rng.standard_normal((v, f)).astype(np.float32)
+    w32 = rng.standard_normal(e).astype(np.float32)
+    return jnp.asarray(src), jnp.asarray(dst), jnp.asarray(x32), \
+        jnp.asarray(w32), v
+
+
+def _reduce_oracle(h, gidx, weight, seg, s, reduce):
+    """Cast-then-reduce in fp32: the precision baseline every io dtype is
+    measured against."""
+    msg = jnp.take(h.astype(jnp.float32), gidx, axis=0)
+    if weight is not None:
+        msg = msg * weight.astype(jnp.float32)[:, None]
+    if reduce == "max":
+        out = jax.ops.segment_max(msg, seg, s, indices_are_sorted=True)
+        return jnp.where(jnp.isfinite(out), out, 0.0)
+    out = jax.ops.segment_sum(msg, seg, s, indices_are_sorted=True)
+    if reduce == "mean":
+        cnt = jax.ops.segment_sum(jnp.ones_like(seg, jnp.float32), seg, s,
+                                  indices_are_sorted=True)
+        out = out / jnp.maximum(cnt, 1.0)[:, None]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# forward parity: every reduce family × weighted × io dtype
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("reduce", ["sum", "mean", "max"])
+@pytest.mark.parametrize("weighted", [False, True])
+def test_gather_reduce_io_dtype(dtype, reduce, weighted):
+    src, dst, x32, w32, v = _graph(seed=1)
+    x = x32.astype(dtype)
+    w = w32.astype(dtype) if weighted else None
+    if weighted:
+        got = ops.index_weight_segment_reduce(x, src, w, dst, v, reduce,
+                                              "pallas", CFG)
+    else:
+        got = ops.index_segment_reduce(x, src, dst, v, reduce, "pallas", CFG)
+    assert got.dtype == dtype, "io dtype must survive the kernel"
+    want = _reduce_oracle(x, src, w, dst, v, reduce)
+    if reduce == "max":
+        got = jnp.where(jnp.isneginf(got.astype(jnp.float32)),
+                        jnp.zeros((), jnp.float32),
+                        got.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want), **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_segment_softmax_io_dtype(dtype):
+    rng = np.random.default_rng(2)
+    m, s, heads = 300, 40, 4
+    idx = jnp.asarray(np.sort(rng.integers(0, s, m)).astype(np.int32))
+    e = jnp.asarray(rng.standard_normal((m, heads)) * 5.0, dtype)
+    p = ops.segment_softmax(e, idx, s, "pallas", CFG)
+    assert p.dtype == dtype
+    m_ = jax.ops.segment_max(e.astype(jnp.float32), idx, s,
+                             indices_are_sorted=True)
+    m_ = jnp.where(jnp.isfinite(m_), m_, 0.0)
+    z = jnp.exp(e.astype(jnp.float32) - jnp.take(m_, idx, axis=0))
+    denom = jax.ops.segment_sum(z, idx, s, indices_are_sorted=True)
+    want = z / jnp.take(jnp.maximum(denom, 1e-20), idx, axis=0)
+    np.testing.assert_allclose(np.asarray(p, np.float32), np.asarray(want),
+                               **_tol(dtype))
+    # live segments still sum to 1 within the io dtype's resolution
+    sums = jax.ops.segment_sum(p.astype(jnp.float32), idx, s,
+                               indices_are_sorted=True)
+    live = np.unique(np.asarray(idx))
+    np.testing.assert_allclose(np.asarray(sums)[live], 1.0,
+                               **_tol(dtype))
+
+
+def test_mixed_bf16_x_fp32_weight():
+    """x in bf16 with fp32 edge weights (the GCN normalizer pattern): the
+    kernel pads/carries each operand in its own dtype and accumulates fp32;
+    output follows x's io dtype."""
+    src, dst, x32, w32, v = _graph(seed=3)
+    x = x32.astype(jnp.bfloat16)
+    got = ops.index_weight_segment_reduce(x, src, w32, dst, v, "sum",
+                                          "pallas", CFG)
+    assert got.dtype == jnp.bfloat16
+    want = _reduce_oracle(x, src, w32, dst, v, "sum")
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want), **_tol(jnp.bfloat16))
+
+
+# ---------------------------------------------------------------------------
+# grads: fp32 accumulation inside the custom VJPs, io dtype on the way out
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("reduce", ["sum", "mean", "max"])
+def test_bf16_grads_match_fp32_oracle(dtype, reduce):
+    """A *linear* loss pins the cotangent exactly (a nonlinear loss would
+    re-amplify the forward's io-dtype rounding through its derivative and
+    measure that instead of the VJP): what remains is purely the custom
+    VJP's scatter/weight/cast path, which must hold the tiered tolerance
+    against both the same-dtype ref impl and the all-fp32 oracle."""
+    src, dst, x32, w32, v = _graph(seed=4)
+    c = jnp.asarray(np.random.default_rng(14)
+                    .standard_normal((v, x32.shape[1])).astype(np.float32))
+
+    def loss(x, w, impl):
+        y = mp(x, jnp.stack([src, dst]), v, reduce=reduce, edge_weight=w,
+               impl=impl, config=CFG)
+        return jnp.vdot(c, y.astype(jnp.float32))
+
+    for weighted in (False, True):
+        x = x32.astype(dtype)
+        w = w32.astype(dtype) if weighted else None
+        gx, gw = jax.grad(loss, (0, 1))(x, w, "pallas") if weighted else \
+            (jax.grad(loss, (0,))(x, w, "pallas")[0], None)
+        assert gx.dtype == dtype, "grads come back in the input's io dtype"
+        # kernel-VJP parity at the *same* io dtype
+        gref = jax.grad(loss, (0,))(x, w, "ref")[0]
+        np.testing.assert_allclose(np.asarray(gx, np.float32),
+                                   np.asarray(gref, np.float32),
+                                   **_tol(dtype))
+        # and against the all-fp32 oracle at the tiered tolerance — except
+        # max, whose subgradient *routing* legitimately changes when bf16
+        # rounding moves which edge attains the maximum (the same-dtype
+        # check above already pins the VJP)
+        if reduce != "max" or dtype == jnp.float32:
+            gx32 = jax.grad(loss, (0,))(x32, w32 if weighted else None,
+                                        "ref")[0]
+            np.testing.assert_allclose(np.asarray(gx, np.float32),
+                                       np.asarray(gx32), **_tol(dtype))
+        if weighted:
+            assert gw.dtype == dtype
+
+
+def test_bf16_grad_of_grad():
+    """Second-order (HVP) through the custom VJPs at bf16 io: the backward
+    pass is itself built from differentiable segment ops, so grad-of-grad
+    must both run and stay near the fp32 oracle."""
+    src, dst, x32, _, v = _graph(v=40, e=160, f=8, seed=5)
+    ei = jnp.stack([src, dst])
+    vec32 = jnp.asarray(np.random.default_rng(6)
+                        .standard_normal(x32.shape).astype(np.float32))
+
+    def make_hvp(impl, dtype):
+        def loss(x):
+            y = mp(x.astype(dtype), ei, v, reduce="sum", impl=impl,
+                   config=CFG)
+            return jnp.sum(jnp.sin(y.astype(jnp.float32)))
+
+        def hvp(x, vec):
+            return jax.grad(
+                lambda x_: jnp.vdot(jax.grad(loss)(x_).astype(jnp.float32),
+                                    vec))(x)
+        return hvp
+
+    got = np.asarray(make_hvp("pallas", jnp.bfloat16)(x32, vec32),
+                     np.float32)
+    want = np.asarray(make_hvp("ref", jnp.float32)(x32, vec32), np.float32)
+    # norm-relative: the curvature term sin(y) re-amplifies the forward's
+    # bf16 rounding per element, so element-wise rtol would measure the
+    # loss surface's sharpness, not the VJP chain being tested
+    rel = np.linalg.norm(got - want) / np.linalg.norm(want)
+    assert rel < 2e-2, f"HVP norm-relative error {rel:.3e} exceeds bf16 tier"
+
+
+# ---------------------------------------------------------------------------
+# fused transform-reduce: forward + grads, both io dtypes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("reduce", ["sum", "mean"])
+@pytest.mark.parametrize("weighted", [False, True])
+def test_fused_transform_reduce_io_dtype(dtype, reduce, weighted):
+    src, dst, x32, w32, v = _graph(seed=7)
+    d_out = 24
+    wm32 = jnp.asarray(np.random.default_rng(8)
+                       .standard_normal((x32.shape[1], d_out))
+                       .astype(np.float32) / 4.0)
+    x, wm = x32.astype(dtype), wm32.astype(dtype)
+    ew = w32.astype(dtype) if weighted else None
+    got = ops.fused_transform_reduce(x, wm, src, ew, dst, v, reduce,
+                                     "pallas", CFG)
+    assert got.dtype == dtype
+    agg = _reduce_oracle(x, src, ew, dst, v, reduce)
+    # the kernel's documented contract casts the fp32 aggregate to the io
+    # dtype once, right before the MXU transform (its native operand
+    # width) — the oracle models the same cast
+    want = agg.astype(dtype).astype(jnp.float32) @ wm.astype(jnp.float32)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want), **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_fused_transform_reduce_grads(dtype):
+    src, dst, x32, w32, v = _graph(seed=9)
+    wm32 = jnp.asarray(np.random.default_rng(10)
+                       .standard_normal((x32.shape[1], 16))
+                       .astype(np.float32) / 4.0)
+    c = jnp.asarray(np.random.default_rng(15)
+                    .standard_normal((v, 16)).astype(np.float32))
+
+    def loss(x, wm, ew, impl):
+        y = ops.fused_transform_reduce(x, wm, src, ew, dst, v, "mean",
+                                       impl, CFG)
+        # linear loss: the cotangent is exact, so the comparison isolates
+        # the fused custom-VJP path (see test_bf16_grads_match_fp32_oracle)
+        return jnp.vdot(c, y.astype(jnp.float32))
+
+    args = (x32.astype(dtype), wm32.astype(dtype), w32.astype(dtype))
+    grads = jax.grad(loss, (0, 1, 2))(*args, "pallas")
+    for g, a in zip(grads, args):
+        assert g.dtype == a.dtype
+    want = jax.grad(loss, (0, 1, 2))(x32, wm32, w32, "ref")
+    for g, w_ in zip(grads, want):
+        ga, wa = np.asarray(g, np.float32), np.asarray(w_, np.float32)
+        # norm-relative: dW contracts the bf16-rounded recomputed aggregate
+        # over every segment, so a single element can exceed an element-wise
+        # tier while the tensor stays well inside it
+        rel = np.linalg.norm(ga - wa) / max(np.linalg.norm(wa), 1e-12)
+        tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+        assert rel < tol, f"grad norm-relative error {rel:.3e}"
+
+
+def test_fusable_gates_vmem():
+    """The fused kernel's VMEM predicate: small layers fit, absurd widths
+    don't — the pallas wrapper raises past the budget and choose_order never
+    volunteers an unfusable arm."""
+    from repro.kernels.fused_transform_reduce import fusable
+    assert fusable(64, 64, jnp.float32, CFG)
+    assert not fusable(4096, 4096, jnp.float32, CFG)
+    # bf16 halves the W-tile/staging bytes ⇒ never *less* fusable than fp32
+    for d in (256, 512, 1024, 2048):
+        assert fusable(d, d, jnp.bfloat16, CFG) or \
+            not fusable(d, d, jnp.float32, CFG)
+    src, dst, x32, _, v = _graph(seed=11)
+    with pytest.raises(ValueError, match="VMEM"):
+        from repro.kernels import ops as kops
+        kops.fused_transform_reduce(
+            jnp.zeros((v, 4096), jnp.float32), jnp.zeros((4096, 4096)),
+            src, dst, v, config=CFG)
+    assert choose_order(4096, 4096, num_edges=int(src.shape[0]),
+                        num_nodes=v, config=CFG,
+                        allow_fused=True) != "fused"
+
+
+# ---------------------------------------------------------------------------
+# matmul-family kernels honor the io dtype (fp32-accumulate contract)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_segment_matmul_io_dtype(dtype):
+    rng = np.random.default_rng(12)
+    sizes = np.array([40, 0, 25, 63], np.int32)
+    m, g = int(sizes.sum()), len(sizes)
+    x = jnp.asarray(rng.standard_normal((m, 24)), dtype)
+    w = jnp.asarray(rng.standard_normal((g, 24, 16)) / 5.0, dtype)
+    out = ops.grouped_segment_matmul(x, jnp.asarray(sizes), w, "pallas")
+    assert out.dtype == dtype, "output follows the input io dtype"
+    want, off = [], 0
+    for i, n in enumerate(sizes):
+        want.append(x[off:off + n].astype(jnp.float32)
+                    @ w[i].astype(jnp.float32))
+        off += n
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(jnp.concatenate(want)),
+                               **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_sddmm_io_dtype(dtype):
+    rng = np.random.default_rng(13)
+    v, m, f = 50, 220, 24
+    a = jnp.asarray(rng.standard_normal((v, f)), dtype)
+    b = jnp.asarray(rng.standard_normal((v, f)), dtype)
+    row = jnp.asarray(rng.integers(0, v, m).astype(np.int32))
+    col = jnp.asarray(rng.integers(0, v, m).astype(np.int32))
+    out = ops.sddmm(a, b, row, col, "pallas", CFG)
+    assert out.dtype == dtype, "fp32-accumulate / input-dtype-out"
+    want = jnp.sum(jnp.take(a.astype(jnp.float32), row, axis=0)
+                   * jnp.take(b.astype(jnp.float32), col, axis=0), axis=-1)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want), **_tol(dtype))
+
+
+# ---------------------------------------------------------------------------
+# hypothesis sweep (CI): shapes × dtype × reduce against the same oracle
+# ---------------------------------------------------------------------------
+
+def test_precision_sweep_deterministic():
+    """Container-friendly stand-in for the hypothesis sweep below: a fixed
+    lattice of shapes × dtype × reduce against the cast-then-reduce oracle
+    (hypothesis is a CI-only dependency)."""
+    for seed, (v, e, f) in enumerate([(17, 60, 5), (90, 500, 33),
+                                      (3, 9, 1), (128, 128, 128)]):
+        src, dst, x32, w32, v = _graph(v=v, e=e, f=f, seed=40 + seed)
+        for dtype in DTYPES:
+            for reduce in ("sum", "mean"):
+                x = x32.astype(dtype)
+                got = ops.index_segment_reduce(x, src, dst, v, reduce,
+                                               "pallas", CFG)
+                want = _reduce_oracle(x, src, None, dst, v, reduce)
+                np.testing.assert_allclose(np.asarray(got, np.float32),
+                                           np.asarray(want), **_tol(dtype))
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(1, 200), st.integers(1, 60), st.integers(1, 40),
+           st.integers(0, 2 ** 16), st.booleans(),
+           st.sampled_from(["sum", "mean", "max"]))
+    def test_precision_sweep_hypothesis(e, v, f, seed, use_bf16, reduce):
+        rng = np.random.default_rng(seed)
+        dst = jnp.asarray(np.sort(rng.integers(0, v, e)).astype(np.int32))
+        src = jnp.asarray(rng.integers(0, v, e).astype(np.int32))
+        dtype = jnp.bfloat16 if use_bf16 else jnp.float32
+        x = jnp.asarray(rng.standard_normal((v, f)), dtype)
+        got = ops.index_segment_reduce(x, src, dst, v, reduce, "pallas", CFG)
+        assert got.dtype == dtype
+        want = _reduce_oracle(x, src, None, dst, v, reduce)
+        g32 = got.astype(jnp.float32)
+        if reduce == "max":
+            g32 = jnp.where(jnp.isneginf(g32), 0.0, g32)
+        np.testing.assert_allclose(np.asarray(g32), np.asarray(want),
+                                   **_tol(dtype))
