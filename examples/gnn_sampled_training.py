@@ -1,0 +1,194 @@
+"""End-to-end out-of-core sampled GNN training (ISSUE 9): neighbor
+sampling into bucketed subgraphs + double-buffered async host→device
+prefetch, over a graph the device never sees whole.
+
+The example *asserts the pipeline contract itself*:
+
+  * **zero retraces**: across a long sampled stream (200 batches by
+    default) the jitted train step compiles exactly once per shape
+    bucket — and the bucket set is known *in advance* by probing the
+    deterministic sampler, so ``traces == probed buckets`` is checked
+    too, not just ``traces == buckets seen``;
+  * **measured overlap**: with prefetch depth >= 2 the steady-state
+    consumer wait is a small fraction of the host production cost the
+    pipeline is hiding (the blocking depth-0 loader pays all of it);
+  * **exact parity**: an exact-neighborhood sampler reproduces the
+    full-graph forward's logits on the seed nodes to 1e-5;
+  * **out-of-core**: the same stream sampled from an on-disk sharded
+    store (bounded shard LRU) is bitwise the in-memory stream;
+  * **serving ingest**: ``GNNServer.serve_sampled`` serves the stream
+    from the same shared plan/executable cache, one compile per bucket.
+
+Usage:
+  python examples/gnn_sampled_training.py                # CI smoke
+  python examples/gnn_sampled_training.py --steps 500 --depth 3
+"""
+from __future__ import annotations
+
+import argparse
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro
+from repro.data.graphs import synth_graph
+from repro.data.pipeline import SampledBatchProducer
+from repro.data.sampling import (NeighborSampler, ShardedGraphStore,
+                                 save_graph_shards)
+from repro.models import gnn
+from repro.optim import adamw
+from repro.serve import GNNServer
+from repro.train import SampledNodeProvider
+
+
+def probe_buckets(graph, args):
+    """The bucket set the stream will touch — sampling is deterministic,
+    so probing the sampler host-side IS the schedule."""
+    sampler = NeighborSampler(graph, fanouts=tuple(args.fanouts),
+                              batch_size=args.batch_size, seed=args.seed)
+    producer = SampledBatchProducer(sampler, feat=args.hidden)
+    return producer.buckets_for_warmup(probe_steps=args.steps)
+
+
+def train_sampled(graph, args):
+    data = SampledNodeProvider(
+        graph, fanouts=tuple(args.fanouts), batch_size=args.batch_size,
+        plan_feat=max(args.hidden, graph.x.shape[1]), depth=args.depth,
+        seed=args.seed)
+    task = repro.NodeClassification.from_provider(
+        data, model="gcn", hidden=args.hidden, impl=args.impl)
+    cfg = repro.TrainerConfig(
+        steps=args.steps, warmup_steps=4,
+        opt=adamw.AdamWConfig(lr=args.lr, weight_decay=0.0), seed=args.seed)
+    with data:
+        res = repro.fit(task, data, cfg)
+        stats = data.stats()
+
+    expected = probe_buckets(graph, args)
+    assert res.traces == len(res.buckets) == len(expected), (
+        f"retrace leak: traces={res.traces} buckets={len(res.buckets)} "
+        f"probed={len(expected)} over {args.steps} batches")
+    assert all(s.sampled for s in res.buckets)
+
+    wait_med = stats["wait_s_median_steady"]
+    prod_med = stats["produce_s_median_steady"]
+    assert wait_med < 0.5 * prod_med, (
+        f"prefetch depth={args.depth} hid too little: steady median wait "
+        f"{wait_med * 1e3:.2f} ms vs produce {prod_med * 1e3:.2f} ms")
+
+    # epoch-scale loss check: batches differ per step, so compare windowed
+    # means across the stream's halves — and only on long streams (short
+    # legs exercise the pipeline contract, not convergence; synthetic
+    # labels are random, so learning is memorization-slow by design)
+    assert np.all(np.isfinite(res.losses))
+    half = len(res.losses) // 2
+    first, last = np.mean(res.losses[:half]), np.mean(res.losses[half:])
+    if args.steps >= 150:
+        assert last < first, (
+            f"loss did not decrease ({first:.4f} -> {last:.4f})")
+
+    print(f"[train] {args.steps} batches, traces={res.traces} == "
+          f"buckets={len(res.buckets)} (probed {len(expected)}), "
+          f"loss {first:.4f} -> {last:.4f}")
+    print(f"[prefetch] depth={args.depth} overlap={stats['overlap']:.2f}  "
+          f"steady wait {wait_med * 1e3:.3f} ms vs produce "
+          f"{prod_med * 1e3:.3f} ms  OK")
+
+
+def check_exact_parity(graph, args):
+    params = gnn.init(jax.random.PRNGKey(args.seed), "gcn",
+                      graph.x.shape[1], args.hidden, 8, num_layers=2)
+    full = np.asarray(gnn.forward(
+        params, "gcn", jnp.asarray(graph.x), jnp.asarray(graph.edge_index),
+        graph.num_nodes, jnp.asarray(graph.deg_inv_sqrt), impl="ref"))
+    sampler = NeighborSampler(graph, fanouts=(None, None), exact=True,
+                              batch_size=8, seed=args.seed)
+    worst = 0.0
+    for step in range(4):
+        sub = sampler.sample_batch(step)
+        out = np.asarray(gnn.forward(
+            params, "gcn", jnp.asarray(sub.x), jnp.asarray(sub.edge_index),
+            sub.num_nodes, jnp.asarray(sub.deg_inv_sqrt), impl="ref"))
+        worst = max(worst, float(np.abs(out[:sub.num_seeds]
+                                        - full[sub.seed_nodes]).max()))
+    assert worst < 1e-5, f"exact-neighborhood parity broke: {worst:.2e}"
+    print(f"[parity] exact 2-hop sampled forward == full-graph forward on "
+          f"seeds, max |Δ| = {worst:.2e}  OK")
+
+
+def check_out_of_core(graph, args):
+    mem = NeighborSampler(graph, fanouts=tuple(args.fanouts),
+                          batch_size=args.batch_size, seed=args.seed)
+    with tempfile.TemporaryDirectory(prefix="repro_shards_") as d:
+        save_graph_shards(graph, d, num_shards=8)
+        store = ShardedGraphStore(d, cache_shards=2)
+        ooc = NeighborSampler(store, fanouts=tuple(args.fanouts),
+                              batch_size=args.batch_size, seed=args.seed)
+        for step in range(6):
+            a, b = mem.sample_batch(step), ooc.sample_batch(step)
+            assert np.array_equal(a.node_ids, b.node_ids)
+            assert np.array_equal(a.edge_index, b.edge_index)
+            assert np.array_equal(a.x, b.x)
+        assert len(store._lru) <= 2, "shard LRU exceeded its bound"
+    print(f"[out-of-core] 8-shard store stream == in-memory stream "
+          f"(shard loads: {store.loads}, resident <= 2)  OK")
+
+
+def check_serving(graph, args):
+    params = gnn.init(jax.random.PRNGKey(args.seed), "gcn",
+                      graph.x.shape[1], args.hidden, 8, num_layers=2)
+    server = GNNServer(params, "gcn", impl=args.impl, feat=args.hidden)
+    sampler = NeighborSampler(graph, fanouts=tuple(args.fanouts),
+                              batch_size=args.batch_size, seed=args.seed)
+    worst = 0.0
+    with server.sampled_pipeline(sampler, depth=args.depth) as pipe:
+        for step in range(12):
+            b = pipe.batch(step)
+            logits = server.serve_sampled(b)
+            ref = np.asarray(gnn.forward(
+                params, "gcn", jnp.asarray(b.graph.x),
+                jnp.asarray(b.graph.edge_index), b.graph.num_nodes,
+                jnp.asarray(b.graph.deg_inv_sqrt), impl="ref"))
+            worst = max(worst, float(np.abs(logits
+                                            - ref[:b.num_seeds]).max()))
+    assert server.compiles == len(server.cache), (
+        f"sampled serving retraced: {server.compiles} compiles for "
+        f"{len(server.cache)} buckets")
+    assert worst < 1e-4, f"served logits diverged: {worst:.2e}"
+    print(f"[serve] 12 sampled batches, compiles={server.compiles} == "
+          f"buckets={len(server.cache)}, max |Δ| vs ref = {worst:.2e}  OK")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--nodes", type=int, default=4096)
+    ap.add_argument("--edges", type=int, default=16384)
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch-size", type=int, default=32)
+    ap.add_argument("--fanouts", type=int, nargs="+", default=[8, 4])
+    ap.add_argument("--depth", type=int, default=2)
+    ap.add_argument("--hidden", type=int, default=32)
+    ap.add_argument("--feat", type=int, default=16)
+    ap.add_argument("--lr", type=float, default=1e-2)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--impl", default="pallas", choices=["ref", "pallas"])
+    args = ap.parse_args(argv)
+    assert args.depth >= 2, "the overlap check needs prefetch depth >= 2"
+
+    # host-resident only: nothing below ever device_puts the full graph
+    graph = synth_graph("ooc-demo", args.nodes, args.edges, feat=args.feat,
+                        num_classes=8, seed=args.seed)
+    print(f"[graph] |V|={graph.num_nodes} |E|={graph.num_edges} "
+          f"(host-only; device sees {args.batch_size}-seed subgraphs)")
+
+    check_exact_parity(graph, args)
+    check_out_of_core(graph, args)
+    train_sampled(graph, args)
+    check_serving(graph, args)
+    print("all sampled-pipeline checks passed")
+
+
+if __name__ == "__main__":
+    main()

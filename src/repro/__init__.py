@@ -56,6 +56,13 @@ from repro.data.graphs import (
     synth_graph,
     synth_typed_graph,
 )
+from repro.data.pipeline import PrefetchPipeline, SampledBatchProducer
+from repro.data.sampling import (
+    NeighborSampler,
+    ShardedGraphStore,
+    Subgraph,
+    save_graph_shards,
+)
 from repro.models.gnn import MODELS, TYPED_MODELS
 from repro.models.gnn import forward as gnn_forward
 from repro.models.gnn import init as gnn_init
@@ -64,6 +71,7 @@ from repro.train import (
     DatasetProvider,
     GraphEpochProvider,
     NodeClassification,
+    SampledNodeProvider,
     Task,
     Trainer,
     TrainerConfig,
@@ -84,9 +92,12 @@ __all__ = [
     "gather",
     # message passing
     "mp", "mp_transform", "mp_typed", "choose_order",
+    # sampling + out-of-core pipeline
+    "NeighborSampler", "Subgraph", "ShardedGraphStore", "save_graph_shards",
+    "SampledBatchProducer", "PrefetchPipeline",
     # models + serving
     "MODELS", "TYPED_MODELS", "gnn_init", "gnn_forward", "GNNServer",
     # training orchestration
-    "DatasetProvider", "GraphEpochProvider", "Task", "NodeClassification",
-    "Trainer", "TrainerConfig", "TrainState", "fit",
+    "DatasetProvider", "GraphEpochProvider", "SampledNodeProvider", "Task",
+    "NodeClassification", "Trainer", "TrainerConfig", "TrainState", "fit",
 ]

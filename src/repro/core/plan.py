@@ -121,6 +121,18 @@ class SegmentPlan:
         """worst-case / tight chunk-dim ratio (>= 1; higher = more skew won)."""
         return self.worst_case_chunks / max(self.max_chunks, 1)
 
+    def pin_worst_case(self) -> "SegmentPlan":
+        """The same plan with ``max_chunks`` pinned to the shape-static
+        worst case — the canonicalization every bucket-reuse path (serving
+        templates, per-bucket train steps, sampled batches) applies so
+        that plans for *different* graphs padded to one (M, S) shape share
+        a treedef and never retrace the executable. Returns ``self`` when
+        already pinned; the tight bound is recoverable only by replanning
+        (it is data, not shape)."""
+        if self.max_chunks == self.worst_case_chunks:
+            return self
+        return dataclasses.replace(self, max_chunks=self.worst_case_chunks)
+
     def validate(self, num_rows: int, num_segments: int) -> None:
         """Trace-time consistency check against the arrays of an op call."""
         if num_rows != self.num_rows or num_segments != self.num_segments:

@@ -1,0 +1,291 @@
+"""Async host→device mini-batch pipeline over the neighbor sampler —
+the back half of the out-of-core path (``docs/sampling.md``).
+
+The per-step host work of sampled training is substantial: k-hop
+expansion, bucket padding, a plan stamp, and the host→device copy. Run
+synchronously, all of it sits on the critical path between device steps.
+This module moves it off:
+
+  :class:`SampledBatchProducer`
+      the **pure host function** ``step -> SampledBatch``: sample (via
+      :class:`~repro.data.sampling.NeighborSampler`), pad onto the
+      serving bucket ladder (:func:`~repro.serve.buckets.pad_to_bucket`),
+      resolve the bucket's canonical :class:`~repro.serve.plan_cache.
+      BucketEntry` from a (thread-safe) :class:`~repro.serve.plan_cache.
+      PlanCache`, stamp the per-batch plan leaves, and ``jax.device_put``
+      the arrays. Because the plan's static aux is the bucket entry's,
+      every batch of a bucket shares one treedef — the consumer's jitted
+      step compiles **once per bucket**, never per batch.
+
+  :class:`PrefetchPipeline`
+      bounded-depth double buffering: while the consumer runs step ``t``,
+      a small thread pool produces steps ``t+1 .. t+depth`` so the next
+      batch's arrays are already on device when the consumer asks.
+      ``depth=0`` degrades to the synchronous blocking loader (the
+      baseline the benchmarks compare against). Wait-time counters make
+      the overlap *measurable*: ``stats()["overlap"]`` is the fraction of
+      host production hidden behind device compute.
+
+Determinism is load-bearing, not best-effort: a batch is a pure function
+of ``(sampler.seed, step)`` — producer threads only decide *when* a batch
+is materialized, never *what* it contains — so any prefetch depth, thread
+count, or scheduling order yields the bit-identical batch stream, and
+checkpoint replay (:mod:`repro.train`) remains exact through the async
+path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.core.plan import SegmentPlan
+from repro.data.graphs import Graph
+from repro.data.sampling import NeighborSampler
+from repro.serve.buckets import BucketPolicy, ShapeBucket, pad_to_bucket
+from repro.serve.plan_cache import (BucketEntry, PlanCache, bucket_max_chunks,
+                                    measured_config)
+
+__all__ = ["SampledBatch", "SampledBatchProducer", "PrefetchPipeline"]
+
+
+@dataclasses.dataclass
+class SampledBatch:
+    """One device-ready mini-batch: the padded host graph plus everything
+    a jitted step consumes — device arrays and the bucket-canonical plan.
+
+    ``arrays`` holds ``x`` (V_bucket, F), ``edge_index`` (2, E_bucket),
+    ``deg_inv_sqrt`` (V_bucket,), ``labels`` (V_bucket,) and
+    ``label_mask`` (V_bucket,) float32 — 1.0 exactly on the seed rows,
+    the rows a loss may read (sampled neighbors have truncated
+    neighborhoods; training on their logits would inject fanout bias).
+    """
+    step: int
+    graph: Graph                  # padded, host-side (parity / unpad use)
+    bucket: ShapeBucket
+    num_seeds: int
+    seed_nodes: np.ndarray        # (num_seeds,) global ids
+    plan: SegmentPlan             # bucket-static aux, per-batch leaves
+    arrays: Dict[str, jax.Array]
+    produce_s: float = 0.0        # host time to materialize this batch
+    wait_s: float = 0.0           # consumer time blocked on this batch
+
+
+class SampledBatchProducer:
+    """The deterministic ``step -> SampledBatch`` host function.
+
+    Plan canonicalization is delegated to a :class:`PlanCache` keyed and
+    built exactly like a serving engine's — pass ``entry_key`` /
+    ``entry_builder`` (e.g. :meth:`GNNServer.sampled_pipeline` passes its
+    own) to *share* cache lines with an engine, or let the defaults build
+    engine-equivalent entries standalone. ``feat`` is the plan's
+    representative feature width (the model's widest layer, same
+    convention as ``make_model_plan``)."""
+
+    def __init__(self, sampler: NeighborSampler, *,
+                 feat: int = 128,
+                 policy: Optional[BucketPolicy] = None,
+                 cache: Optional[PlanCache] = None,
+                 entry_key: Optional[Callable[[ShapeBucket], object]] = None,
+                 entry_builder: Optional[
+                     Callable[[ShapeBucket], BucketEntry]] = None,
+                 device=None,
+                 perfdb=None):
+        self.sampler = sampler
+        self.feat = int(feat)
+        self.policy = policy or BucketPolicy()
+        self.cache = cache if cache is not None else PlanCache()
+        self._entry_key = entry_key or (
+            lambda b: (b, self.feat, "sampled", "plan", 0))
+        self._entry_builder = entry_builder or self._default_entry
+        self._device = device
+        self._perfdb = perfdb
+
+    def _default_entry(self, bucket: ShapeBucket) -> BucketEntry:
+        """Engine-equivalent cache line: measured PerfDB winner when one
+        exists (pure lookup — producer threads never sweep), else the
+        decision-tree rules; worst-case bucket-static ``max_chunks``."""
+        config = measured_config(bucket, self.feat, db=self._perfdb)
+        if config is None:
+            from repro.core.heuristics import select_config
+            config = select_config(
+                max(bucket.num_edges, 1),
+                max(min(bucket.num_edges, bucket.num_nodes), 1),
+                self.feat, tune=False)
+        return BucketEntry(bucket, self.feat, config,
+                           max_chunks=bucket_max_chunks(bucket, config))
+
+    def entry_for(self, bucket: ShapeBucket) -> BucketEntry:
+        return self.cache.get_or_build(
+            self._entry_key(bucket),
+            lambda: self._entry_builder(bucket))
+
+    def buckets_for_warmup(self, probe_steps: int = 8) -> list:
+        """The distinct buckets the first ``probe_steps`` batches touch —
+        sampling is deterministic, so probing IS the schedule (host-only:
+        nothing is padded or moved to device)."""
+        seen = []
+        for s in range(probe_steps):
+            sub = self.sampler.sample_batch(s)
+            from repro.serve.buckets import bucket_for
+            b = bucket_for(sub.num_nodes, sub.num_edges, self.policy)
+            if b not in seen:
+                seen.append(b)
+        return seen
+
+    def produce(self, step: int) -> SampledBatch:
+        """Materialize one batch. Pure in ``step``; safe from any thread
+        (the cache is locked, JAX transfers are thread-safe)."""
+        t0 = time.perf_counter()
+        sub = self.sampler.sample_batch(step)
+        padded, bucket = pad_to_bucket(sub, self.policy)
+        entry = self.entry_for(bucket)
+        plan = entry.stamp(padded.edge_index[1])
+        mask = (np.arange(bucket.num_nodes) < sub.num_seeds
+                ).astype(np.float32)
+        put = (lambda a: jax.device_put(a, self._device)) if self._device \
+            else jax.device_put
+        arrays = {
+            "x": put(padded.x),
+            "edge_index": put(padded.edge_index),
+            "deg_inv_sqrt": put(padded.deg_inv_sqrt),
+            "labels": put(padded.labels),
+            "label_mask": put(mask),
+        }
+        return SampledBatch(
+            step=int(step), graph=padded, bucket=bucket,
+            num_seeds=sub.num_seeds, seed_nodes=sub.seed_nodes,
+            plan=plan, arrays=arrays,
+            produce_s=time.perf_counter() - t0)
+
+
+class PrefetchPipeline:
+    """Bounded-depth async prefetch over a ``step -> SampledBatch``
+    producer.
+
+    ``batch(step)`` returns the batch for ``step`` and keeps the window
+    ``step+1 .. step+depth`` in flight on the pool. Sequential
+    consumption (the training loop) therefore finds its next batch
+    already produced — host sampling/padding/planning and the H2D copy
+    overlap the consumer's device step. Out-of-window or backward jumps
+    are produced synchronously (determinism makes that merely slow, never
+    wrong). ``depth=0`` is the blocking loader: every batch is produced
+    inline, which is the baseline ``stats()['overlap']`` measures against.
+
+    Always :meth:`close` (or use as a context manager) — the pool's
+    threads are non-daemon."""
+
+    def __init__(self, producer, depth: int = 2,
+                 num_threads: Optional[int] = None):
+        if depth < 0:
+            raise ValueError("depth must be >= 0")
+        produce = producer.produce if hasattr(producer, "produce") \
+            else producer
+        self._produce = produce
+        self.depth = int(depth)
+        self.num_threads = max(1, int(num_threads if num_threads is not None
+                                      else min(self.depth or 1, 4)))
+        self._pool: Optional[ThreadPoolExecutor] = None
+        if self.depth > 0:
+            self._pool = ThreadPoolExecutor(
+                max_workers=self.num_threads,
+                thread_name_prefix="repro-prefetch")
+        self._pending: Dict[int, Future] = {}
+        self._lock = threading.Lock()
+        self._closed = False
+        # counters (consumer-thread only)
+        self.batches = 0
+        self.wait_s = 0.0             # consumer blocked on production
+        self.produce_s = 0.0          # total host production time
+        self.sync_falls = 0           # out-of-window synchronous produces
+        self._wait_hist = []
+        self._produce_hist = []
+
+    # -- scheduling ----------------------------------------------------------
+    def _schedule(self, step: int) -> None:
+        with self._lock:
+            if self._closed or step in self._pending:
+                return
+            self._pending[step] = self._pool.submit(self._produce, step)
+
+    def batch(self, step: int) -> SampledBatch:
+        """The batch for ``step`` (bit-identical at any depth)."""
+        step = int(step)
+        if self._closed:
+            raise RuntimeError("pipeline is closed")
+        t0 = time.perf_counter()
+        if self._pool is None:
+            b = self._produce(step)
+            b.wait_s = time.perf_counter() - t0
+        else:
+            with self._lock:
+                fut = self._pending.pop(step, None)
+            if fut is None:
+                # cold start or random access: produce here, synchronously
+                self.sync_falls += 1
+                b = self._produce(step)
+            else:
+                b = fut.result()
+            b.wait_s = time.perf_counter() - t0
+            for ahead in range(step + 1, step + 1 + self.depth):
+                self._schedule(ahead)
+        self.batches += 1
+        self.wait_s += b.wait_s
+        self.produce_s += b.produce_s
+        self._wait_hist.append(b.wait_s)
+        self._produce_hist.append(b.produce_s)
+        return b
+
+    # -- accounting ----------------------------------------------------------
+    def stats(self) -> Dict:
+        """Overlap accounting. ``overlap`` = fraction of host production
+        hidden from the consumer (0 for the blocking loader by
+        construction). ``*_steady`` medians drop the first batch — the
+        cold start pays compiles and cache misses that say nothing about
+        steady-state overlap."""
+        wait = np.asarray(self._wait_hist[1:] or self._wait_hist or [0.0])
+        prod = np.asarray(self._produce_hist[1:] or self._produce_hist
+                          or [0.0])
+        return {
+            "depth": self.depth,
+            "num_threads": self.num_threads,
+            "batches": self.batches,
+            "sync_falls": self.sync_falls,
+            "wait_s": self.wait_s,
+            "produce_s": self.produce_s,
+            "overlap": (1.0 - self.wait_s / self.produce_s
+                        if self.produce_s > 0 else 0.0),
+            "wait_s_median_steady": float(np.median(wait)),
+            "produce_s_median_steady": float(np.median(prod)),
+        }
+
+    def close(self) -> None:
+        """Shut the pool down; idempotent. In-flight futures are awaited
+        (they hold no external resources beyond device buffers)."""
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+            pending = list(self._pending.values())
+            self._pending.clear()
+        for fut in pending:
+            fut.cancel()
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
+
+    def __enter__(self) -> "PrefetchPipeline":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def __del__(self):  # backstop; close() is the contract
+        try:
+            self.close()
+        except Exception:
+            pass

@@ -258,6 +258,56 @@ class GNNServer:
         plan = entry.stamp(padded.edge_index[1])
         return entry.executable(self.params, x, ei, dis, plan)
 
+    # -- sampled (out-of-core) ingest -----------------------------------------
+    def sampled_pipeline(self, sampler, *, depth: int = 2,
+                         num_threads: Optional[int] = None):
+        """An async prefetch pipeline whose batches are served by *this*
+        engine's cache lines: the producer shares ``self.cache`` and
+        builds entries with ``self._build_entry`` (executable attached),
+        so a batch's plan is stamped under the exact static aux
+        :meth:`serve_sampled` will execute — one compile per bucket
+        across the producer threads and the serving loop combined."""
+        from repro.data.pipeline import PrefetchPipeline, SampledBatchProducer
+        if self.shards > 1:
+            raise NotImplementedError(
+                "sampled serving is single-device (the sharded path "
+                "re-partitions per request)")
+        producer = SampledBatchProducer(
+            sampler, feat=self.feat, policy=self.policy, cache=self.cache,
+            entry_key=self._entry_key, entry_builder=self._build_entry,
+            perfdb=self._perfdb)
+        return PrefetchPipeline(producer, depth=depth,
+                                num_threads=num_threads)
+
+    def serve_sampled(self, batch) -> np.ndarray:
+        """Serve one :class:`~repro.data.pipeline.SampledBatch`: the seed
+        rows' logits, (num_seeds, C). Batches from
+        :meth:`sampled_pipeline` reuse their stamped plan as-is; a batch
+        produced against a foreign cache is re-stamped under this
+        engine's entry so the executable never retraces on aux drift."""
+        if self.shards > 1:
+            raise NotImplementedError("sampled serving is single-device")
+        t0 = time.perf_counter()
+        entry = self.cache.get_or_build(
+            self._entry_key(batch.bucket),
+            lambda: self._build_entry(batch.bucket))
+        plan = batch.plan
+        if plan.config != entry.config or plan.max_chunks != entry.max_chunks:
+            plan = entry.stamp(batch.graph.edge_index[1])
+        traces_before = self._trace_events
+        logits = entry.executable(
+            self.params, batch.arrays["x"], batch.arrays["edge_index"],
+            batch.arrays["deg_inv_sqrt"], plan)
+        logits = np.asarray(jax.block_until_ready(logits))
+        if not entry.compiled:
+            entry.compiled = True
+            entry.compile_s = time.perf_counter() - t0
+            self.cache.stats.compile_s += entry.compile_s
+        self.cache.stats.compiles += self._trace_events - traces_before
+        self._batches += 1
+        self._serve_s += time.perf_counter() - t0
+        return logits[:batch.num_seeds]
+
     def run_until_drained(self, max_steps: int = 100_000
                           ) -> Dict[int, ServedResult]:
         steps = 0

@@ -31,6 +31,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import threading
 import time
 from typing import Callable, Dict, Hashable, Optional
 
@@ -189,67 +190,86 @@ class PlanCache:
     engines. ``weight=`` on the counting methods attributes a lookup to
     the number of *requests* it served (a batch of k graphs sharing one
     bucket counts k hits), which is the hit-rate a serving SLO cares
-    about."""
+    about.
+
+    Thread-safe: the prefetch pipeline's producer threads
+    (:mod:`repro.data.pipeline`) hit the same cache concurrently with the
+    consumer, so every read-modify-write — LRU reorder, eviction, stats
+    bump, and the build inside :meth:`get_or_build` — happens under one
+    re-entrant lock. Holding the lock across the builder intentionally
+    serializes misses on the same key: N racing threads produce exactly
+    one ``BucketEntry`` (``plan_builds`` counts distinct keys, not
+    threads), which is the invariant the zero-retrace accounting needs.
+    """
 
     def __init__(self, capacity: int = 32):
         if capacity < 1:
             raise ValueError("capacity must be >= 1")
         self.capacity = int(capacity)
         self.stats = CacheStats()
+        self._lock = threading.RLock()
         self._entries: "collections.OrderedDict[Hashable, BucketEntry]" = \
             collections.OrderedDict()
 
     def __len__(self) -> int:
-        return len(self._entries)
+        with self._lock:
+            return len(self._entries)
 
     def keys(self):
-        return list(self._entries)
+        with self._lock:
+            return list(self._entries)
 
     # -- core --------------------------------------------------------------
     def lookup(self, key: Hashable, weight: int = 1) -> Optional[BucketEntry]:
-        entry = self._entries.get(key)
-        if entry is None:
-            self.stats.misses += weight
-            return None
-        self._entries.move_to_end(key)
-        self.stats.hits += weight
-        return entry
+        with self._lock:
+            entry = self._entries.get(key)
+            if entry is None:
+                self.stats.misses += weight
+                return None
+            self._entries.move_to_end(key)
+            self.stats.hits += weight
+            return entry
 
     def insert(self, key: Hashable, entry: BucketEntry) -> None:
-        self._entries[key] = entry
-        self._entries.move_to_end(key)
-        while len(self._entries) > self.capacity:
-            self._entries.popitem(last=False)
-            self.stats.evictions += 1
+        with self._lock:
+            self._entries[key] = entry
+            self._entries.move_to_end(key)
+            while len(self._entries) > self.capacity:
+                self._entries.popitem(last=False)
+                self.stats.evictions += 1
 
     def get_or_build(self, key: Hashable,
                      builder: Callable[[], BucketEntry],
                      weight: int = 1) -> BucketEntry:
         """One serving lookup: LRU hit, or build + insert on miss (the
         build time lands in ``plan_build_s``; the *compile* happens on the
-        entry's first execution and is accounted by the engine)."""
-        entry = self.lookup(key, weight=weight)
-        if entry is None:
-            t0 = time.perf_counter()
-            entry = builder()
-            self.stats.plan_builds += 1
-            self.stats.plan_build_s += time.perf_counter() - t0
-            self.insert(key, entry)
-        return entry
+        entry's first execution and is accounted by the engine). The lock
+        is held across the builder — concurrent misses on one key build
+        once (the RLock makes a builder that re-enters the cache safe)."""
+        with self._lock:
+            entry = self.lookup(key, weight=weight)
+            if entry is None:
+                t0 = time.perf_counter()
+                entry = builder()
+                self.stats.plan_builds += 1
+                self.stats.plan_build_s += time.perf_counter() - t0
+                self.insert(key, entry)
+            return entry
 
     def warm(self, key: Hashable,
              builder: Callable[[], BucketEntry]) -> BucketEntry:
         """Prefill ahead of traffic: like :meth:`get_or_build` but counted
         as a prefill, not a miss — warmup must not dilute the serving
         hit-rate it exists to protect."""
-        entry = self._entries.get(key)
-        if entry is not None:
-            self._entries.move_to_end(key)
+        with self._lock:
+            entry = self._entries.get(key)
+            if entry is not None:
+                self._entries.move_to_end(key)
+                return entry
+            t0 = time.perf_counter()
+            entry = builder()
+            self.stats.prefills += 1
+            self.stats.plan_builds += 1
+            self.stats.plan_build_s += time.perf_counter() - t0
+            self.insert(key, entry)
             return entry
-        t0 = time.perf_counter()
-        entry = builder()
-        self.stats.prefills += 1
-        self.stats.plan_builds += 1
-        self.stats.plan_build_s += time.perf_counter() - t0
-        self.insert(key, entry)
-        return entry

@@ -14,7 +14,7 @@ jitted plan-reusing step, AdamW + schedule, checkpoint/resume, and the
 fault-tolerant loop. See ``docs/training.md``.
 """
 from repro.train.providers import (DatasetProvider, GraphEpochProvider,
-                                   TokenProvider)
+                                   SampledNodeProvider, TokenProvider)
 from repro.train.task import (GraphStatic, LMStatic, LMTask,
                               NodeClassification, Task)
 from repro.train.trainer import (FitResult, Trainer, TrainerConfig,
@@ -23,6 +23,7 @@ from repro.train.trainer import (FitResult, Trainer, TrainerConfig,
 __all__ = [
     "DatasetProvider",
     "GraphEpochProvider",
+    "SampledNodeProvider",
     "TokenProvider",
     "Task",
     "GraphStatic",

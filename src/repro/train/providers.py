@@ -100,6 +100,72 @@ class GraphEpochProvider:
         return self._epoch[step % len(self._epoch)]
 
 
+class SampledNodeProvider:
+    """Out-of-core node-classification batches: a
+    :class:`~repro.data.sampling.NeighborSampler` behind the provider
+    protocol, with the async prefetch pipeline
+    (:class:`~repro.data.pipeline.PrefetchPipeline`) doing the host work
+    off the critical path.
+
+    ``batch(step)`` returns a device-ready
+    :class:`~repro.data.pipeline.SampledBatch` —
+    :class:`~repro.train.task.NodeClassification` recognizes it and trains
+    on the seed rows only (``label_mask``). Determinism in the step index
+    is inherited from the sampler (a batch is a pure function of
+    ``(seed, step)``; prefetch threads change timing, never content), so
+    checkpoint replay stays exact.
+
+    ``num_classes`` defaults from the store's metadata; ``feat`` is the
+    *input* feature width. Pass ``plan_feat`` (the model's widest layer —
+    ``NodeClassification.plan_feat``) so producer-side config selection
+    matches the task's. Call :meth:`close` (or use as a context manager)
+    when done — the pipeline owns live threads."""
+
+    def __init__(self, store_or_graph, *, fanouts=(8, 4), batch_size=64,
+                 seed_nodes=None, exact=False, seed=0, plan_feat=128,
+                 policy=None, cache=None, depth=2, num_threads=None,
+                 device=None):
+        from repro.data.pipeline import (PrefetchPipeline,
+                                         SampledBatchProducer)
+        from repro.data.sampling import InMemoryStore, NeighborSampler
+        from repro.data.graphs import Graph
+        if isinstance(store_or_graph, Graph):
+            store_or_graph = InMemoryStore(store_or_graph)
+        self.store = store_or_graph
+        self.sampler = NeighborSampler(
+            store_or_graph, fanouts, batch_size=batch_size,
+            seed_nodes=seed_nodes, exact=exact, seed=seed)
+        self.producer = SampledBatchProducer(
+            self.sampler, feat=plan_feat, policy=policy, cache=cache,
+            device=device)
+        self.pipeline = PrefetchPipeline(self.producer, depth=depth,
+                                         num_threads=num_threads)
+        self.feat = int(self.store.feat)
+        self.num_classes = int(self.store.num_classes)
+        self.num_relations = 0
+        self.typed = False
+
+    def __len__(self) -> int:
+        return len(self.sampler)
+
+    def batch(self, step: int):
+        return self.pipeline.batch(step)
+
+    def stats(self) -> dict:
+        d = self.pipeline.stats()
+        d["cache"] = self.producer.cache.stats.as_dict()
+        return d
+
+    def close(self) -> None:
+        self.pipeline.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+
 class TokenProvider:
     """LM token batches — a provider-protocol wrapper over the
     deterministic :class:`repro.data.tokens.SyntheticTokens` pipeline

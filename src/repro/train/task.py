@@ -65,12 +65,16 @@ class Task(Protocol):
 
 class GraphStatic(NamedTuple):
     """Hashable shape bucket of a graph batch — the executable-cache key.
-    ``shards`` is 0 single-device, else the mesh size."""
+    ``shards`` is 0 single-device, else the mesh size. ``sampled`` marks
+    mini-batches from the out-of-core pipeline: their arrays carry a
+    ``label_mask`` the loss must honor, so they may not share an
+    executable with a same-shape full-graph batch (different treedef)."""
     model: str
     num_nodes: int
     num_edges: int
     typed: bool
     shards: int
+    sampled: bool = False
 
 
 @dataclasses.dataclass
@@ -128,6 +132,9 @@ class NodeClassification:
                         num_relations=self.num_relations)
 
     def prepare(self, batch, *, plan=None, config=None, tune=None, mesh=None):
+        from repro.data.pipeline import SampledBatch
+        if isinstance(batch, SampledBatch):
+            return self._prepare_sampled(batch, plan=plan, mesh=mesh)
         g = batch
         typed = isinstance(g, TypedGraph)
         if typed != (self.model in gnn.TYPED_MODELS):
@@ -166,9 +173,38 @@ class NodeClassification:
         labels = arrays["labels"]
         logz = jax.nn.logsumexp(logits, axis=-1)
         gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
-        acc = jnp.mean((jnp.argmax(logits, axis=-1) == labels)
-                       .astype(jnp.float32))
-        return jnp.mean(logz - gold), {"accuracy": acc}
+        correct = (jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32)
+        mask = arrays.get("label_mask")
+        if mask is None:
+            return jnp.mean(logz - gold), {"accuracy": jnp.mean(correct)}
+        # sampled mini-batch: only the seed rows carry full (exact or
+        # fanout-complete) neighborhoods — supervising padded/neighbor
+        # rows would train on truncated aggregations and drop-id noise
+        denom = jnp.maximum(jnp.sum(mask), 1.0)
+        return (jnp.sum(mask * (logz - gold)) / denom,
+                {"accuracy": jnp.sum(mask * correct) / denom})
+
+    def _prepare_sampled(self, batch, *, plan=None, mesh=None):
+        """Sampled mini-batches arrive device-ready: the pipeline's
+        producer already padded to a bucket, stamped the plan under the
+        bucket entry's canonical aux, and issued the host→device copies.
+        No memoization here — every batch is a fresh object (the ``_dev``
+        id-keyed memo would leak), and none is needed: all the per-shape
+        work was paid once, in the shared :class:`~repro.serve.plan_cache.
+        PlanCache`."""
+        if mesh is not None:
+            raise NotImplementedError(
+                "sampled mini-batches are single-device for now (shard the "
+                "sampler by seed range instead)")
+        if self.model in gnn.TYPED_MODELS:
+            raise ValueError(
+                f"model {self.model!r} is relational; the neighbor sampler "
+                "emits homogeneous subgraphs")
+        static = GraphStatic(self.model, batch.bucket.num_nodes,
+                             batch.bucket.num_edges, False, 0, sampled=True)
+        arrays = dict(batch.arrays)
+        arrays["plan"] = plan if plan is not None else batch.plan
+        return arrays, static
 
     # -- memoized per-graph state -------------------------------------------
 
@@ -200,8 +236,7 @@ class NodeClassification:
             canon = self._buckets[bkey] = (p0.config, p0.stats)
         cfg, stats = canon
         p = g.make_plan(self.plan_feat, config=cfg)       # memoized on g
-        return dataclasses.replace(p, max_chunks=p.worst_case_chunks,
-                                   stats=stats)
+        return dataclasses.replace(p.pin_worst_case(), stats=stats)
 
     def _bucket_rplan(self, g, static: GraphStatic, config, tune):
         bkey = ("rel", static, config, tune)

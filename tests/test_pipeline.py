@@ -1,0 +1,274 @@
+"""Out-of-core pipeline: producer/prefetch determinism, PlanCache
+thread-safety under concurrent producers, zero-retrace sampled training
+through repro.fit, and the GNNServer sampled-ingest path."""
+import threading
+from concurrent.futures import ThreadPoolExecutor
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro.data.graphs import synth_graph
+from repro.data.pipeline import (PrefetchPipeline, SampledBatch,
+                                 SampledBatchProducer)
+from repro.data.sampling import NeighborSampler
+from repro.models import gnn
+from repro.serve import GNNServer, PlanCache
+from repro.serve.buckets import ShapeBucket
+from repro.serve.plan_cache import BucketEntry, bucket_max_chunks
+from repro.train import SampledNodeProvider
+
+KEY = jax.random.PRNGKey(0)
+G = synth_graph("pipe", 256, 1024, feat=16, num_classes=8, seed=3)
+
+
+def _sampler(**kw):
+    kw.setdefault("fanouts", (4, 3))
+    kw.setdefault("batch_size", 16)
+    kw.setdefault("seed", 7)
+    return NeighborSampler(G, **kw)
+
+
+# ---------------------------------------------------------------------------
+# producer
+# ---------------------------------------------------------------------------
+
+def test_producer_batch_contents():
+    prod = SampledBatchProducer(_sampler(), feat=32)
+    b = prod.produce(0)
+    assert isinstance(b, SampledBatch)
+    v, e = b.bucket.num_nodes, b.bucket.num_edges
+    assert b.graph.num_nodes == v and b.graph.num_edges == e
+    assert b.arrays["x"].shape == (v, 16)
+    assert b.arrays["edge_index"].shape == (2, e)
+    # label_mask is 1.0 exactly on the seed rows
+    mask = np.asarray(b.arrays["label_mask"])
+    np.testing.assert_array_equal(mask, (np.arange(v) < b.num_seeds)
+                                  .astype(np.float32))
+    # the plan carries the bucket entry's static aux (treedef sharing)
+    entry = prod.entry_for(b.bucket)
+    assert b.plan.max_chunks == entry.max_chunks
+    assert b.plan.config == entry.config
+    assert b.plan.stats == entry.template.stats
+
+
+def test_same_bucket_batches_share_treedef():
+    prod = SampledBatchProducer(_sampler(), feat=32)
+    batches = [prod.produce(s) for s in range(6)]
+    by_bucket: dict = {}
+    for b in batches:
+        by_bucket.setdefault(b.bucket, []).append(b)
+    shared = [v for v in by_bucket.values() if len(v) > 1]
+    assert shared, "expected at least one bucket to repeat within 6 steps"
+    for group in shared:
+        d0 = jax.tree_util.tree_structure((group[0].arrays, group[0].plan))
+        for b in group[1:]:
+            assert jax.tree_util.tree_structure((b.arrays, b.plan)) == d0
+    # one plan build per distinct bucket, not per batch
+    assert prod.cache.stats.plan_builds == len(by_bucket)
+
+
+# ---------------------------------------------------------------------------
+# prefetch pipeline
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("depth,threads", [(1, 1), (2, 2), (3, 4)])
+def test_prefetch_equals_blocking(depth, threads):
+    """Any depth/thread combination yields the bit-identical batch stream
+    of the synchronous loader."""
+    ref_prod = SampledBatchProducer(_sampler(), feat=32)
+    ref = [ref_prod.produce(s) for s in range(6)]
+    prod = SampledBatchProducer(_sampler(), feat=32)
+    with PrefetchPipeline(prod, depth=depth, num_threads=threads) as pipe:
+        for s in range(6):
+            b = pipe.batch(s)
+            assert b.bucket == ref[s].bucket
+            assert b.num_seeds == ref[s].num_seeds
+            for k in ("x", "edge_index", "labels", "label_mask"):
+                np.testing.assert_array_equal(np.asarray(b.arrays[k]),
+                                              np.asarray(ref[s].arrays[k]))
+        stats = pipe.stats()
+        assert stats["batches"] == 6
+        assert stats["sync_falls"] == 1          # cold start only
+
+
+def test_prefetch_random_access_falls_back():
+    prod = SampledBatchProducer(_sampler(), feat=32)
+    with PrefetchPipeline(prod, depth=2) as pipe:
+        pipe.batch(0)
+        b = pipe.batch(10)                        # out of window: sync
+        assert b.step == 10
+        assert pipe.sync_falls == 2
+        ref = SampledBatchProducer(_sampler(), feat=32).produce(10)
+        np.testing.assert_array_equal(np.asarray(b.arrays["edge_index"]),
+                                      np.asarray(ref.arrays["edge_index"]))
+
+
+def test_pipeline_close_is_idempotent_and_final():
+    prod = SampledBatchProducer(_sampler(), feat=32)
+    pipe = PrefetchPipeline(prod, depth=2)
+    pipe.batch(0)
+    pipe.close()
+    pipe.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        pipe.batch(1)
+
+
+def test_depth0_is_blocking():
+    prod = SampledBatchProducer(_sampler(), feat=32)
+    with PrefetchPipeline(prod, depth=0) as pipe:
+        assert pipe._pool is None
+        b = pipe.batch(0)
+        assert b.wait_s >= b.produce_s * 0.5      # nothing hidden
+
+        assert pipe.stats()["overlap"] <= 0.5
+
+
+# ---------------------------------------------------------------------------
+# PlanCache thread-safety (satellite regression)
+# ---------------------------------------------------------------------------
+
+def test_plan_cache_concurrent_get_or_build():
+    """N threads racing on M keys must build each entry exactly once and
+    lose no counter increments — the invariant the async producer's
+    zero-retrace accounting rests on."""
+    cache = PlanCache(capacity=32)
+    from repro.core.heuristics import select_config
+    buckets = [ShapeBucket(64 << i, 256 << i) for i in range(4)]
+
+    def build(b):
+        cfg = select_config(b.num_edges, min(b.num_edges, b.num_nodes), 64,
+                            tune=False)
+        return BucketEntry(b, 64, cfg,
+                           max_chunks=bucket_max_chunks(b, cfg))
+
+    built: dict = {}
+    lock = threading.Lock()
+
+    def hammer(tid):
+        out = []
+        for i in range(40):
+            b = buckets[(tid + i) % len(buckets)]
+            e = cache.get_or_build(b, lambda b=b: build(b))
+            with lock:
+                prev = built.setdefault(b, e)
+            assert prev is e, "two threads built the same key"
+            out.append(e)
+        return out
+
+    with ThreadPoolExecutor(max_workers=8) as pool:
+        list(pool.map(hammer, range(8)))
+    assert cache.stats.plan_builds == len(buckets)
+    assert cache.stats.misses == len(buckets)
+    assert cache.stats.lookups == 8 * 40
+    assert len(cache) == len(buckets)
+
+
+def test_plan_cache_concurrent_eviction_consistency():
+    cache = PlanCache(capacity=2)
+    from repro.core.heuristics import select_config
+    cfg = select_config(256, 64, 64, tune=False)
+
+    def build(i):
+        b = ShapeBucket(64, 256)
+        return BucketEntry(b, 64, cfg, max_chunks=bucket_max_chunks(b, cfg))
+
+    def hammer(tid):
+        for i in range(60):
+            cache.get_or_build((tid + i) % 5, lambda i=i: build(i))
+
+    with ThreadPoolExecutor(max_workers=6) as pool:
+        list(pool.map(hammer, range(6)))
+    assert len(cache) == 2                        # capacity respected
+    s = cache.stats
+    assert s.evictions == s.plan_builds - len(cache)
+    assert s.hits + s.misses == 6 * 60
+
+
+# ---------------------------------------------------------------------------
+# training integration
+# ---------------------------------------------------------------------------
+
+def test_sampled_training_zero_retraces():
+    with SampledNodeProvider(G, fanouts=(4, 3), batch_size=32, plan_feat=64,
+                             depth=2, seed=5) as data:
+        task = repro.NodeClassification.from_provider(data, model="gcn",
+                                                      hidden=64,
+                                                      impl="pallas")
+        res = repro.fit(task, data, repro.TrainerConfig(steps=20))
+        assert res.traces == len(res.buckets)
+        assert all(s.sampled for s in res.buckets)
+        assert np.all(np.isfinite(res.losses))
+        stats = data.stats()
+        assert stats["batches"] == 20
+        # one plan build per distinct bucket across producer threads
+        assert stats["cache"]["plan_builds"] == len(res.buckets)
+
+
+def test_sampled_loss_ignores_non_seed_rows():
+    """The masked loss is a function of the seed rows only: perturbing a
+    neighbor row's label must not change it."""
+    task = repro.NodeClassification(model="gcn", d_in=16, hidden=32,
+                                    num_classes=8, num_layers=2, impl="ref")
+    params = task.init(KEY)
+    prod = SampledBatchProducer(_sampler(), feat=32)
+    b = prod.produce(0)
+    arrays, static = task.prepare(b)
+    assert static.sampled
+    loss1, m1 = task.loss(params, arrays, static, KEY)
+    labels = np.asarray(arrays["labels"]).copy()
+    labels[b.num_seeds:] = (labels[b.num_seeds:] + 1) % 8
+    arrays2 = dict(arrays, labels=jnp.asarray(labels))
+    loss2, m2 = task.loss(params, arrays2, static, KEY)
+    assert float(loss1) == pytest.approx(float(loss2), abs=1e-7)
+    assert float(m1["accuracy"]) == pytest.approx(float(m2["accuracy"]),
+                                                  abs=1e-7)
+
+
+def test_sampled_rejects_mesh_and_typed():
+    task = repro.NodeClassification(model="rgcn", d_in=16, num_classes=8)
+    prod = SampledBatchProducer(_sampler(), feat=32)
+    b = prod.produce(0)
+    with pytest.raises(ValueError, match="relational"):
+        task.prepare(b)
+
+
+# ---------------------------------------------------------------------------
+# serving integration
+# ---------------------------------------------------------------------------
+
+def test_serve_sampled_parity_and_single_compile():
+    params = gnn.init(KEY, "gcn", 16, 32, 8, num_layers=2)
+    server = GNNServer(params, "gcn", impl="pallas", feat=32)
+    with server.sampled_pipeline(_sampler(), depth=2) as pipe:
+        for step in range(6):
+            b = pipe.batch(step)
+            logits = server.serve_sampled(b)
+            assert logits.shape == (b.num_seeds, 8)
+            ref = gnn.forward(params, "gcn", jnp.asarray(b.graph.x),
+                              jnp.asarray(b.graph.edge_index),
+                              b.graph.num_nodes,
+                              jnp.asarray(b.graph.deg_inv_sqrt), impl="ref")
+            np.testing.assert_allclose(logits,
+                                       np.asarray(ref)[:b.num_seeds],
+                                       atol=1e-4)
+    # producer threads + serving loop shared one cache: one compile per
+    # bucket, total
+    assert server.compiles == len(server.cache)
+
+
+def test_serve_sampled_foreign_batch_restamps():
+    """A batch produced against its own (non-engine) cache may carry a
+    different canonical config; serve_sampled must re-stamp rather than
+    retrace-or-crash."""
+    params = gnn.init(KEY, "gcn", 16, 32, 8, num_layers=2)
+    server = GNNServer(params, "gcn", impl="pallas", feat=32)
+    prod = SampledBatchProducer(_sampler(), feat=128)   # different feat
+    b = prod.produce(0)
+    logits = server.serve_sampled(b)
+    assert logits.shape == (b.num_seeds, 8)
+    compiles_before = server.compiles
+    server.serve_sampled(prod.produce(1))
+    assert server.compiles == compiles_before

@@ -1,0 +1,262 @@
+"""Neighbor sampling: CSR store correctness, out-of-core shard round
+trips, determinism (across runs and thread counts), empty-neighborhood
+safety, and the exact-neighborhood parity property (sampled forward ==
+full-graph forward on the seed rows)."""
+import os
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.graphs import synth_graph
+from repro.data.sampling import (InMemoryStore, NeighborSampler,
+                                 ShardedGraphStore, Subgraph,
+                                 save_graph_shards)
+from repro.models import gnn
+from repro.serve.buckets import pad_to_bucket
+
+KEY = jax.random.PRNGKey(0)
+G = synth_graph("samp", 256, 1024, feat=16, num_classes=8, seed=3)
+STORE = InMemoryStore(G)
+
+
+# ---------------------------------------------------------------------------
+# stores
+# ---------------------------------------------------------------------------
+
+def test_inmemory_store_matches_edge_list():
+    for d in range(G.num_nodes):
+        expect = G.edge_index[0][G.edge_index[1] == d]
+        np.testing.assert_array_equal(STORE.in_edges(d), expect)
+        assert STORE.in_degree(d) == expect.size
+
+
+def test_inmemory_store_rejects_unsorted():
+    bad = synth_graph("bad", 8, 16, feat=4, seed=0)
+    ei = bad.edge_index.copy()
+    ei[1] = ei[1][::-1]
+    import dataclasses
+    with pytest.raises(ValueError, match="sorted"):
+        InMemoryStore(dataclasses.replace(bad, edge_index=ei))
+
+
+@pytest.mark.parametrize("num_shards", [1, 3, 4])
+def test_sharded_store_round_trip(tmp_path, num_shards):
+    path = save_graph_shards(G, str(tmp_path / f"s{num_shards}"), num_shards)
+    sg = ShardedGraphStore(path, cache_shards=2)
+    assert (sg.num_nodes, sg.num_edges) == (G.num_nodes, G.num_edges)
+    for d in [0, 1, 100, 200, G.num_nodes - 1]:
+        np.testing.assert_array_equal(sg.in_edges(d), STORE.in_edges(d))
+    ids = np.array([0, 7, 99, 128, 255])
+    a, b = STORE.gather_nodes(ids), sg.gather_nodes(ids)
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k])
+
+
+def test_sharded_store_is_actually_out_of_core(tmp_path):
+    """The LRU holds at most cache_shards shard files; scanning the whole
+    node range with cache_shards=1 must re-load shards (bounded memory),
+    and the number of files on disk matches the shard count."""
+    path = save_graph_shards(G, str(tmp_path / "ooc"), 4)
+    assert len([f for f in os.listdir(path) if f.endswith(".npz")]) == 4
+    sg = ShardedGraphStore(path, cache_shards=1)
+    for d in range(0, G.num_nodes, 16):
+        sg.in_edges(d)
+    assert len(sg._lru) == 1
+    assert sg.loads >= 4
+
+
+def test_sharded_sampler_matches_inmemory(tmp_path):
+    path = save_graph_shards(G, str(tmp_path / "eq"), 3)
+    sg = ShardedGraphStore(path, cache_shards=2)
+    a = NeighborSampler(STORE, fanouts=(4, 3), batch_size=16, seed=7)
+    b = NeighborSampler(sg, fanouts=(4, 3), batch_size=16, seed=7)
+    for step in range(4):
+        sa, sb = a.sample_batch(step), b.sample_batch(step)
+        np.testing.assert_array_equal(sa.node_ids, sb.node_ids)
+        np.testing.assert_array_equal(sa.edge_index, sb.edge_index)
+        np.testing.assert_array_equal(sa.x, sb.x)
+
+
+# ---------------------------------------------------------------------------
+# sampler invariants
+# ---------------------------------------------------------------------------
+
+def test_subgraph_structure():
+    s = NeighborSampler(G, fanouts=(4, 3), batch_size=16, seed=7)
+    sub = s.sample_batch(0)
+    assert isinstance(sub, Subgraph)
+    assert sub.num_seeds == 16
+    # dst-sorted (the kernel/plan contract), seeds are rows [0, 16)
+    assert np.all(np.diff(sub.edge_index[1]) >= 0)
+    np.testing.assert_array_equal(sub.seed_nodes, sub.node_ids[:16])
+    # node data comes from the parent graph, including its deg_inv_sqrt
+    np.testing.assert_array_equal(sub.x, G.x[sub.node_ids])
+    np.testing.assert_array_equal(sub.deg_inv_sqrt,
+                                  G.deg_inv_sqrt[sub.node_ids])
+    # fanout cap: no destination exceeds its per-hop budget
+    counts = np.bincount(sub.edge_index[1], minlength=sub.num_nodes)
+    assert counts[:16].max() <= 4
+    # every edge is a real parent edge
+    gsrc = sub.node_ids[sub.edge_index[0]]
+    gdst = sub.node_ids[sub.edge_index[1]]
+    parent = set(zip(G.edge_index[0].tolist(), G.edge_index[1].tolist()))
+    assert all((int(a), int(b)) in parent for a, b in zip(gsrc, gdst))
+
+
+def test_sampler_determinism_across_runs():
+    for _ in range(2):
+        a = NeighborSampler(G, fanouts=(4, 3), batch_size=16, seed=7)
+        b = NeighborSampler(G, fanouts=(4, 3), batch_size=16, seed=7)
+        for step in [0, 1, 5, 17]:
+            sa, sb = a.sample_batch(step), b.sample_batch(step)
+            np.testing.assert_array_equal(sa.node_ids, sb.node_ids)
+            np.testing.assert_array_equal(sa.edge_index, sb.edge_index)
+
+
+def test_sampler_determinism_under_threads():
+    """The batch stream is a pure function of (seed, step): producing the
+    same steps from many threads, in scrambled order, yields bitwise the
+    reference batches — the property that makes prefetch depth/thread
+    count invisible to training."""
+    s = NeighborSampler(G, fanouts=(4, 3), batch_size=16, seed=7)
+    ref = {step: s.sample_batch(step) for step in range(8)}
+    results: dict = {}
+    errors: list = []
+
+    def worker(steps):
+        try:
+            for st in steps:
+                results[st] = s.sample_batch(st)
+        except Exception as e:                      # pragma: no cover
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(list(range(8))[i::4],))
+               for i in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    for step, sub in ref.items():
+        np.testing.assert_array_equal(results[step].node_ids, sub.node_ids)
+        np.testing.assert_array_equal(results[step].edge_index,
+                                      sub.edge_index)
+
+
+def test_seed_epoch_coverage():
+    s = NeighborSampler(G, fanouts=(2,), batch_size=64, seed=1)
+    seen = np.concatenate([s.seeds_for(st) for st in range(len(s))])
+    assert np.unique(seen).size == seen.size          # no repeats in epoch
+    # different epochs permute differently
+    assert not np.array_equal(s.seeds_for(0), s.seeds_for(len(s)))
+
+
+def test_sampler_rejects_bad_args():
+    with pytest.raises(ValueError, match="fanout"):
+        NeighborSampler(G, fanouts=(0,))
+    with pytest.raises(ValueError, match="at least one hop"):
+        NeighborSampler(G, fanouts=())
+    s = NeighborSampler(G, fanouts=(2,), batch_size=4)
+    with pytest.raises(ValueError, match="unique"):
+        s.sample(np.array([1, 1]))
+    with pytest.raises(ValueError, match="out of range"):
+        s.sample(np.array([G.num_nodes]))
+
+
+# ---------------------------------------------------------------------------
+# empty neighborhoods (satellite regression)
+# ---------------------------------------------------------------------------
+
+def _isolated_nodes():
+    iso = np.where(STORE.indptr[1:] == STORE.indptr[:-1])[0]
+    assert iso.size > 0, "power-law synth graph should have isolated nodes"
+    return iso
+
+
+def test_empty_neighborhood_yields_valid_subgraph():
+    iso = _isolated_nodes()
+    s = NeighborSampler(G, fanouts=(4, 4), batch_size=4, seed=0)
+    sub = s.sample(iso[:3])
+    assert sub.num_edges == 0
+    assert sub.edge_index.shape == (2, 0)
+    assert sub.edge_index.dtype == np.int32
+    assert sub.num_nodes == 3 and sub.num_seeds == 3
+
+
+def test_empty_neighborhood_through_pad_and_planned_forward():
+    """Regression: isolated seeds must survive the whole path — sampler →
+    bucket pad → stamped plan → planned pallas forward — and produce the
+    same logits as the dense reference (their logits depend only on their
+    own features)."""
+    iso = _isolated_nodes()
+    s = NeighborSampler(G, fanouts=(4, 4), batch_size=4, seed=0)
+    sub = s.sample(iso[:3])
+    padded, bucket = pad_to_bucket(sub)
+    from repro.serve.plan_cache import BucketEntry, bucket_max_chunks
+    from repro.core.heuristics import select_config
+    cfg = select_config(max(bucket.num_edges, 1), 1, 32, tune=False)
+    entry = BucketEntry(bucket, 32, cfg,
+                        max_chunks=bucket_max_chunks(bucket, cfg))
+    plan = entry.stamp(padded.edge_index[1])
+    params = gnn.init(KEY, "gcn", 16, 32, 8, num_layers=2)
+    out = gnn.forward(params, "gcn", jnp.asarray(padded.x),
+                      jnp.asarray(padded.edge_index), padded.num_nodes,
+                      jnp.asarray(padded.deg_inv_sqrt), impl="pallas",
+                      plan=plan)
+    ref = gnn.forward(params, "gcn", jnp.asarray(padded.x),
+                      jnp.asarray(padded.edge_index), padded.num_nodes,
+                      jnp.asarray(padded.deg_inv_sqrt), impl="ref")
+    np.testing.assert_allclose(np.asarray(out)[:3], np.asarray(ref)[:3],
+                               atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# exact-neighborhood parity (satellite property test)
+# ---------------------------------------------------------------------------
+
+def _check_exact_parity(model, depth, batch, step, seed):
+    """An exact-neighborhood depth-L subgraph reproduces the depth-L
+    model's seed logits: every aggregation any seed's receptive field
+    needs is complete, and the parent deg_inv_sqrt makes the GCN weights
+    identical."""
+    params = gnn.init(KEY, model, 16, 32, 8, num_layers=depth)
+    full = np.asarray(gnn.forward(params, model, jnp.asarray(G.x),
+                                  jnp.asarray(G.edge_index), G.num_nodes,
+                                  jnp.asarray(G.deg_inv_sqrt), impl="ref"))
+    s = NeighborSampler(G, fanouts=(None,) * depth, exact=True,
+                        batch_size=batch, seed=seed)
+    sub = s.sample_batch(step)
+    out = np.asarray(gnn.forward(params, model, jnp.asarray(sub.x),
+                                 jnp.asarray(sub.edge_index), sub.num_nodes,
+                                 jnp.asarray(sub.deg_inv_sqrt), impl="ref"))
+    np.testing.assert_allclose(out[:sub.num_seeds], full[sub.seed_nodes],
+                               atol=1e-5, rtol=1e-5)
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:                                  # pragma: no cover
+    _HAVE_HYPOTHESIS = False
+
+if _HAVE_HYPOTHESIS:
+    @settings(max_examples=10, deadline=None)
+    @given(model=st.sampled_from(["gcn", "sage"]),
+           depth=st.integers(1, 2),
+           batch=st.integers(1, 12),
+           step=st.integers(0, 30),
+           seed=st.integers(0, 2 ** 16))
+    def test_exact_sampled_forward_matches_full_graph(model, depth, batch,
+                                                      step, seed):
+        _check_exact_parity(model, depth, batch, step, seed)
+else:
+    # deterministic fallback: the parity property still runs where
+    # hypothesis is unavailable, over a fixed sweep of the same space
+    @pytest.mark.parametrize("model", ["gcn", "sage"])
+    @pytest.mark.parametrize("depth", [1, 2])
+    def test_exact_sampled_forward_matches_full_graph(model, depth):
+        for batch, step, seed in [(1, 0, 0), (8, 3, 11), (12, 17, 12345)]:
+            _check_exact_parity(model, depth, batch, step, seed)
