@@ -339,6 +339,41 @@ def run_smoke():
          f"compiles={st['compiles']}|buckets={st['buckets']}|"
          f"serving_compiles={st['compiles'] - st['cache']['prefills']}")
 
+    # -- observability overhead: instrumented vs disabled serving ---------
+    # the same fully-warmed serving pass (every bucket a cache hit), timed
+    # with repro.obs enabled and disabled, interleaved min-of-k so runner
+    # noise hits both arms equally. The <3% bound is the subsystem's
+    # overhead contract (docs/observability.md) — asserted here, so CI
+    # fails loudly rather than drifting.
+    from repro import obs as obs_mod
+
+    def serve_pass():
+        t0 = time.perf_counter()
+        for g_s in stream:
+            server.submit(g_s)
+        server.run_until_drained()
+        return time.perf_counter() - t0
+
+    was_enabled = obs_mod.enabled()
+    t_on, t_off = [], []
+    try:
+        obs_mod.enable()
+        serve_pass()                  # discard: arm-switch warm pass
+        for _ in range(4):
+            obs_mod.enable()
+            t_on.append(serve_pass())
+            obs_mod.disable()
+            t_off.append(serve_pass())
+    finally:
+        obs_mod.enable() if was_enabled else obs_mod.disable()
+    overhead = min(t_on) / min(t_off) - 1.0
+    assert overhead < 0.03, (
+        f"observability overhead {overhead * 100:.2f}% breaks the <3% "
+        "contract (docs/observability.md)")
+    emit("smoke/obs_overhead", min(t_on) * 1e6 / len(stream),
+         f"disabled={min(t_off) * 1e6 / len(stream):.0f}us|"
+         f"overhead={overhead * 100:+.2f}%|gate<3%")
+
     # -- training: the cached hot train step (fwd + bwd + adamw) ----------
     # one Trainer on one shape bucket; fit() pays the single compile, then
     # the row times the cached executable — the steady-state per-step cost

@@ -66,6 +66,13 @@ def main(argv=None) -> int:
         "guards against a smoke section silently disappearing (e.g. the "
         "precision or fused-launch rows) while the geomean still passes",
     )
+    ap.add_argument(
+        "--json-out",
+        default=None,
+        metavar="PATH",
+        help="write a machine-readable per-row delta report (JSON) here — "
+        "the CI artifact dashboards diff across runs",
+    )
     args = ap.parse_args(argv)
 
     try:
@@ -107,6 +114,29 @@ def main(argv=None) -> int:
 
     geomean = math.exp(sum(math.log(r) for r in ratios) / len(ratios))
     verdict = "PASS" if geomean <= args.threshold else "FAIL"
+    if args.json_out:
+        report = {
+            "baseline": args.baseline,
+            "fresh": args.fresh,
+            "threshold": args.threshold,
+            "geomean": geomean,
+            "verdict": verdict,
+            "rows": [
+                {
+                    "name": name,
+                    "baseline_us": base[name],
+                    "fresh_us": fresh[name],
+                    "ratio": fresh[name] / base[name],
+                    "over_threshold": fresh[name] / base[name] > args.threshold,
+                }
+                for name in common
+            ],
+            "baseline_only": sorted(set(base) - set(fresh)),
+            "fresh_only": sorted(set(fresh) - set(base)),
+        }
+        with open(args.json_out, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"per-row delta report written to {args.json_out}")
     print(
         f"\ngeomean slowdown: {geomean:.3f}x over {len(ratios)} cases "
         f"(threshold {args.threshold:.2f}x) -> {verdict}"

@@ -1,0 +1,153 @@
+#!/usr/bin/env python
+"""CI observability gate: validate a flushed repro.obs telemetry dump.
+
+Checks (all must pass):
+
+  * the JSON-lines metrics file parses line-by-line and contains at least
+    one ``{"record": "metric"}`` row and the trailing ``{"record": "meta"}``
+    stamp;
+  * every ``--require-metrics`` name is present among the metric rows, and
+    every metric row's name is in the documented schema
+    (``repro.obs.OBS_SCHEMA``) with exactly the documented label set;
+  * (optional, ``--trace``) the Chrome trace file is valid ``trace_event``
+    JSON — a ``traceEvents`` list of complete ("ph": "X") events with
+    numeric ``ts``/``dur`` — and names every ``--require-stages`` stage.
+
+Usage:
+    python scripts/check_metrics.py metrics.jsonl \
+        [--require-metrics serve.requests serve.plan_cache.hits ...] \
+        [--trace trace.json] [--require-stages serve.step serve.execute ...]
+
+Exit status: 0 = pass, 1 = malformed dump / missing names.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+DEFAULT_REQUIRED = [
+    "serve.requests",
+    "serve.batches",
+    "serve.compiles",
+    "serve.request_latency_s",
+    "serve.plan_cache.hits",
+    "serve.plan_cache.misses",
+    "kernel.launches",
+    "compile.events",
+]
+
+
+def check_metrics(path: str, required: list) -> list:
+    errors = []
+    metric_names = set()
+    records = {"metric": 0, "event": 0, "meta": 0}
+    try:
+        with open(path) as f:
+            lines = [ln for ln in f.read().splitlines() if ln.strip()]
+    except OSError as exc:
+        return [f"cannot read {path}: {exc}"]
+    if not lines:
+        return [f"{path} is empty"]
+
+    rows = []
+    for i, ln in enumerate(lines, 1):
+        try:
+            rows.append(json.loads(ln))
+        except ValueError as exc:
+            errors.append(f"{path}:{i}: not valid JSON ({exc})")
+    for row in rows:
+        kind = row.get("record")
+        if kind not in records:
+            errors.append(f"unknown record kind {kind!r}")
+            continue
+        records[kind] += 1
+        if kind == "metric":
+            metric_names.add(row.get("name", ""))
+
+    if not records["metric"]:
+        errors.append(f"{path}: no metric records")
+    if not records["meta"]:
+        errors.append(f"{path}: missing trailing meta record")
+
+    missing = [n for n in required if n not in metric_names]
+    if missing:
+        errors.append(f"required metrics missing: {', '.join(missing)}")
+
+    # every exported name/label set must match the documented schema
+    try:
+        from repro.obs import OBS_SCHEMA
+    except ImportError:
+        OBS_SCHEMA = None
+        print("  warning: repro.obs not importable; skipping schema check")
+    if OBS_SCHEMA is not None:
+        for row in rows:
+            if row.get("record") != "metric":
+                continue
+            name = row.get("name", "")
+            if name not in OBS_SCHEMA:
+                errors.append(f"metric {name!r} not in OBS_SCHEMA "
+                              "(undocumented metric exported)")
+            elif set(row.get("labels", {})) != set(OBS_SCHEMA[name]):
+                errors.append(
+                    f"metric {name!r} labels {sorted(row.get('labels', {}))} "
+                    f"!= documented {sorted(OBS_SCHEMA[name])}")
+
+    print(f"{path}: {records['metric']} metric rows "
+          f"({len(metric_names)} names), {records['event']} events")
+    return errors
+
+
+def check_trace(path: str, require_stages: list) -> list:
+    errors = []
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as exc:
+        return [f"cannot load trace {path}: {exc}"]
+    events = doc.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        return [f"{path}: no traceEvents"]
+    names = set()
+    for e in events:
+        if e.get("ph") != "X":
+            errors.append(f"trace event {e.get('name')!r}: ph != 'X'")
+            continue
+        if not isinstance(e.get("ts"), (int, float)) or \
+                not isinstance(e.get("dur"), (int, float)):
+            errors.append(f"trace event {e.get('name')!r}: "
+                          "non-numeric ts/dur")
+        names.add(e.get("name", ""))
+    missing = [s for s in require_stages if s not in names]
+    if missing:
+        errors.append(f"trace stages missing: {', '.join(missing)} "
+                      f"(saw {sorted(names)})")
+    print(f"{path}: {len(events)} trace events, stages {sorted(names)}")
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("metrics", help="JSON-lines dump (REPRO_METRICS_PATH)")
+    ap.add_argument("--require-metrics", nargs="+", default=DEFAULT_REQUIRED,
+                    metavar="NAME", help="metric names that must be present")
+    ap.add_argument("--trace", default=None,
+                    help="Chrome trace JSON (REPRO_TRACE_PATH) to validate")
+    ap.add_argument("--require-stages", nargs="+", default=[],
+                    metavar="STAGE",
+                    help="span names the trace must contain")
+    args = ap.parse_args(argv)
+
+    errors = check_metrics(args.metrics, args.require_metrics)
+    if args.trace:
+        errors += check_trace(args.trace, args.require_stages)
+
+    for e in errors:
+        print(f"check_metrics: {e}", file=sys.stderr)
+    print("check_metrics:", "PASS" if not errors else "FAIL")
+    return 0 if not errors else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

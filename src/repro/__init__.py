@@ -27,7 +27,14 @@ Training is one call (see :mod:`repro.train` / ``docs/training.md``):
     data = repro.GraphEpochProvider()
     task = repro.NodeClassification.from_provider(data, model="gcn")
     result = repro.fit(task, data, repro.TrainerConfig(steps=100))
+
+Telemetry rides along everywhere (see ``docs/observability.md``):
+``repro.obs`` is the metrics registry / tracing-span / attribution
+subsystem every engine, cache, pipeline and trainer reports into —
+``print(repro.obs.report())`` after any of the above summarizes what
+ran, what compiled, and why.
 """
+from repro import obs
 from repro.core.config_space import KernelConfig
 from repro.core.mp import choose_order, mp, mp_transform, mp_typed
 from repro.core.ops import (
@@ -100,4 +107,6 @@ __all__ = [
     # training orchestration
     "DatasetProvider", "GraphEpochProvider", "SampledNodeProvider", "Task",
     "NodeClassification", "Trainer", "TrainerConfig", "TrainState", "fit",
+    # telemetry
+    "obs",
 ]

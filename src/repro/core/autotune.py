@@ -505,9 +505,12 @@ def tune(op: str = "segment_reduce", *, idx_size: int, num_segments: int,
         # REPRO_AUTOTUNE=1 hot loop must not re-read the JSON per op call
         db = _default_db(os.environ.get("REPRO_PERFDB_PATH", ""))
 
+    from repro import obs
+
     if not force:
         entry = db.get(key)
         if entry is not None:
+            obs.record_tune(op, cache_hit=True, key=key, backend=backend)
             return _entry_to_result(op, backend, key, entry)
 
     if max_configs is None:
@@ -527,8 +530,10 @@ def tune(op: str = "segment_reduce", *, idx_size: int, num_segments: int,
             return _median_us(run(cfg), reps, warmup)
 
     swept: List[Tuple[KernelConfig, float]] = []
-    for cfg in cands:
-        swept.append((cfg, float(measure_fn(cfg))))
+    with obs.span("autotune.tune", op=op, key=key,
+                  candidates=len(cands)):
+        for cfg in cands:
+            swept.append((cfg, float(measure_fn(cfg))))
 
     best_cfg, _ = min(swept, key=lambda cu: cu[1])
     entry = {
@@ -547,6 +552,8 @@ def tune(op: str = "segment_reduce", *, idx_size: int, num_segments: int,
                     for c, u in swept],
     }
     db.put(key, entry)
+    obs.record_tune(op, cache_hit=False, timings=len(swept), key=key,
+                    backend=backend, best=list(best_cfg.astuple()))
     timings = {config_projection(op, c): u for c, u in swept}
     return TuneResult(op=op, backend=backend, key=key, config=best_cfg,
                       timings=timings, timings_performed=len(swept),

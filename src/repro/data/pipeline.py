@@ -44,9 +44,11 @@ from typing import Callable, Dict, Optional
 import jax
 import numpy as np
 
+from repro import obs
 from repro.core.plan import SegmentPlan
 from repro.data.graphs import Graph
 from repro.data.sampling import NeighborSampler
+from repro.obs import span
 from repro.serve.buckets import BucketPolicy, ShapeBucket, pad_to_bucket
 from repro.serve.plan_cache import (BucketEntry, PlanCache, bucket_max_chunks,
                                     measured_config)
@@ -136,32 +138,41 @@ class SampledBatchProducer:
             b = bucket_for(sub.num_nodes, sub.num_edges, self.policy)
             if b not in seen:
                 seen.append(b)
+                obs.record_probe("pipeline.warmup_probe", str(b), step=s)
         return seen
 
     def produce(self, step: int) -> SampledBatch:
         """Materialize one batch. Pure in ``step``; safe from any thread
-        (the cache is locked, JAX transfers are thread-safe)."""
-        t0 = time.perf_counter()
-        sub = self.sampler.sample_batch(step)
-        padded, bucket = pad_to_bucket(sub, self.policy)
-        entry = self.entry_for(bucket)
-        plan = entry.stamp(padded.edge_index[1])
-        mask = (np.arange(bucket.num_nodes) < sub.num_seeds
-                ).astype(np.float32)
-        put = (lambda a: jax.device_put(a, self._device)) if self._device \
-            else jax.device_put
-        arrays = {
-            "x": put(padded.x),
-            "edge_index": put(padded.edge_index),
-            "deg_inv_sqrt": put(padded.deg_inv_sqrt),
-            "labels": put(padded.labels),
-            "label_mask": put(mask),
-        }
-        return SampledBatch(
-            step=int(step), graph=padded, bucket=bucket,
-            num_seeds=sub.num_seeds, seed_nodes=sub.seed_nodes,
-            plan=plan, arrays=arrays,
-            produce_s=time.perf_counter() - t0)
+        (the cache is locked, JAX transfers are thread-safe; spans use a
+        per-thread context, so producer-thread trees never interleave)."""
+        with span("pipeline.produce", step=int(step)) as root:
+            t0 = time.perf_counter()
+            with span("pipeline.sample", step=int(step)):
+                sub = self.sampler.sample_batch(step)
+            with span("pipeline.pad"):
+                padded, bucket = pad_to_bucket(sub, self.policy)
+            root.set(bucket=str(bucket))
+            with span("pipeline.plan_cache", bucket=str(bucket)):
+                entry = self.entry_for(bucket)
+            with span("pipeline.stamp"):
+                plan = entry.stamp(padded.edge_index[1])
+            mask = (np.arange(bucket.num_nodes) < sub.num_seeds
+                    ).astype(np.float32)
+            put = (lambda a: jax.device_put(a, self._device)) \
+                if self._device else jax.device_put
+            with span("pipeline.device_put"):
+                arrays = {
+                    "x": put(padded.x),
+                    "edge_index": put(padded.edge_index),
+                    "deg_inv_sqrt": put(padded.deg_inv_sqrt),
+                    "labels": put(padded.labels),
+                    "label_mask": put(mask),
+                }
+            return SampledBatch(
+                step=int(step), graph=padded, bucket=bucket,
+                num_seeds=sub.num_seeds, seed_nodes=sub.seed_nodes,
+                plan=plan, arrays=arrays,
+                produce_s=time.perf_counter() - t0)
 
 
 class PrefetchPipeline:
@@ -198,13 +209,39 @@ class PrefetchPipeline:
         self._pending: Dict[int, Future] = {}
         self._lock = threading.Lock()
         self._closed = False
-        # counters (consumer-thread only)
-        self.batches = 0
-        self.wait_s = 0.0             # consumer blocked on production
-        self.produce_s = 0.0          # total host production time
-        self.sync_falls = 0           # out-of-window synchronous produces
-        self._wait_hist = []
-        self._produce_hist = []
+        # accounting (consumer-thread writes) — registry-backed under this
+        # pipeline's instance label; vital so stats() works with
+        # observability disabled
+        reg = obs.get_registry()
+        self._labels = {"pipeline": obs.next_id("pipeline")}
+        self._m_batches = reg.counter("pipeline.batches", ("pipeline",),
+                                      vital=True)
+        self._m_sync_falls = reg.counter("pipeline.sync_falls",
+                                         ("pipeline",), vital=True)
+        self._m_wait = reg.histogram("pipeline.wait_s", ("pipeline",),
+                                     vital=True)
+        self._m_produce = reg.histogram("pipeline.produce_s", ("pipeline",),
+                                        vital=True)
+        for m in (self._m_batches, self._m_sync_falls, self._m_wait,
+                  self._m_produce):
+            m.touch(**self._labels)
+
+    # registry-backed views of the original counter attributes
+    @property
+    def batches(self) -> int:
+        return int(self._m_batches.value(**self._labels))
+
+    @property
+    def sync_falls(self) -> int:
+        return int(self._m_sync_falls.value(**self._labels))
+
+    @property
+    def wait_s(self) -> float:
+        return self._m_wait.total(**self._labels)
+
+    @property
+    def produce_s(self) -> float:
+        return self._m_produce.total(**self._labels)
 
     # -- scheduling ----------------------------------------------------------
     def _schedule(self, step: int) -> None:
@@ -227,18 +264,16 @@ class PrefetchPipeline:
                 fut = self._pending.pop(step, None)
             if fut is None:
                 # cold start or random access: produce here, synchronously
-                self.sync_falls += 1
+                self._m_sync_falls.inc(**self._labels)
                 b = self._produce(step)
             else:
                 b = fut.result()
             b.wait_s = time.perf_counter() - t0
             for ahead in range(step + 1, step + 1 + self.depth):
                 self._schedule(ahead)
-        self.batches += 1
-        self.wait_s += b.wait_s
-        self.produce_s += b.produce_s
-        self._wait_hist.append(b.wait_s)
-        self._produce_hist.append(b.produce_s)
+        self._m_batches.inc(**self._labels)
+        self._m_wait.observe(b.wait_s, **self._labels)
+        self._m_produce.observe(b.produce_s, **self._labels)
         return b
 
     # -- accounting ----------------------------------------------------------
@@ -248,9 +283,10 @@ class PrefetchPipeline:
         construction). ``*_steady`` medians drop the first batch — the
         cold start pays compiles and cache misses that say nothing about
         steady-state overlap."""
-        wait = np.asarray(self._wait_hist[1:] or self._wait_hist or [0.0])
-        prod = np.asarray(self._produce_hist[1:] or self._produce_hist
-                          or [0.0])
+        wait_hist = self._m_wait.samples(**self._labels)
+        produce_hist = self._m_produce.samples(**self._labels)
+        wait = np.asarray(wait_hist[1:] or wait_hist or [0.0])
+        prod = np.asarray(produce_hist[1:] or produce_hist or [0.0])
         return {
             "depth": self.depth,
             "num_threads": self.num_threads,

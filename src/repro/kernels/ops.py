@@ -22,7 +22,9 @@ from __future__ import annotations
 
 import collections
 import contextlib
+import contextvars
 import os
+import threading
 from typing import Optional
 
 import jax
@@ -50,23 +52,60 @@ def _default_interpret() -> bool:
 # Because the wrappers run at trace time, a jitted graph records each op
 # site once; reset before tracing and read after to audit a path (e.g.
 # assert the sharded message-passing path launches only fused kernels).
+#
+# Concurrency: the store is lock-guarded and scopes are contextvar-scoped
+# per thread/context — a PrefetchPipeline producer thread tracing in the
+# background can never leak its events into a consumer's fusion_scope()
+# (each thread folds into its own innermost scope; threads without a
+# scope fold into the process-global counter). Every event is also
+# mirrored into the repro.obs metrics registry ("kernel.launches") so
+# launch counts and fused-vs-unfused ratios land in the same telemetry
+# dump as everything else.
 # ---------------------------------------------------------------------------
 
-_FUSION_COUNTS: collections.Counter = collections.Counter()
+_FUSION_LOCK = threading.Lock()
+_FUSION_GLOBAL: collections.Counter = collections.Counter()
+_FUSION_SCOPES: contextvars.ContextVar = contextvars.ContextVar(
+    "repro_fusion_scopes", default=())
+
+
+def _fusion_sink() -> collections.Counter:
+    scopes = _FUSION_SCOPES.get()
+    return scopes[-1] if scopes else _FUSION_GLOBAL
+
+
+_LAUNCH_METRIC = None
+
+
+def _launch_metric():
+    global _LAUNCH_METRIC
+    if _LAUNCH_METRIC is None:
+        from repro.obs import get_registry
+        _LAUNCH_METRIC = get_registry().counter(
+            "kernel.launches", labels=("kind", "op"),
+            help="trace-time kernel launch accounting "
+                 "(fused/unfused/merge)")
+    return _LAUNCH_METRIC
 
 
 def account(kind: str, op: str) -> None:
     """Record one ``kind`` ∈ {"fused", "unfused", "merge"} event on ``op``."""
-    _FUSION_COUNTS[f"{kind}:{op}"] += 1
+    with _FUSION_LOCK:
+        _fusion_sink()[f"{kind}:{op}"] += 1
+    _launch_metric().inc(kind=kind, op=op)
 
 
 def fusion_counts() -> dict:
-    """Snapshot of the accounting counters (trace-time launch counts)."""
-    return dict(_FUSION_COUNTS)
+    """Snapshot of the accounting counters (trace-time launch counts) —
+    the innermost :func:`fusion_scope` of the calling thread, else the
+    process-global store."""
+    with _FUSION_LOCK:
+        return dict(_fusion_sink())
 
 
 def reset_fusion_counts() -> None:
-    _FUSION_COUNTS.clear()
+    with _FUSION_LOCK:
+        _fusion_sink().clear()
 
 
 @contextlib.contextmanager
@@ -80,16 +119,20 @@ def fusion_scope():
     This is what per-request accounting needs (e.g. the serving engine's
     per-request fusion audit): without a scope, every request's trace
     events pile onto one process-wide counter and no per-request
-    attribution is possible. Scopes nest."""
-    global _FUSION_COUNTS
-    outer = _FUSION_COUNTS
+    attribution is possible. Scopes nest, and they are **contextvar-
+    scoped**: a scope only captures events of its own thread/context, so
+    concurrent producer threads (repro.data.pipeline) keep folding into
+    the global store instead of interleaving into an unrelated scope."""
     inner = collections.Counter()
-    _FUSION_COUNTS = inner
+    outer_scopes = _FUSION_SCOPES.get()
+    token = _FUSION_SCOPES.set(outer_scopes + (inner,))
     try:
         yield inner
     finally:
-        _FUSION_COUNTS = outer
-        outer.update(inner)
+        _FUSION_SCOPES.reset(token)
+        with _FUSION_LOCK:
+            (outer_scopes[-1] if outer_scopes else _FUSION_GLOBAL
+             ).update(inner)
 
 
 def _resolve_config(config: Optional[KernelConfig], plan, idx_size: int,

@@ -28,6 +28,7 @@ import time
 from collections import deque
 from typing import Deque, List, Optional
 
+from repro import obs
 from repro.data.graphs import Graph
 
 __all__ = ["GraphRequest", "GraphBatcher"]
@@ -56,12 +57,22 @@ class GraphBatcher:
         self.max_batch_graphs = int(max_batch_graphs)
         self.max_wait_s = float(max_wait_s)
         self.queue: Deque[GraphRequest] = deque()
+        # admission telemetry (non-vital: purely observational — nothing
+        # in the serving contract reads these back)
+        reg = obs.get_registry()
+        self._labels = {"batcher": obs.next_id("batcher")}
+        self._m_submitted = reg.counter("serve.submitted", ("batcher",))
+        self._m_depth = reg.gauge("serve.queue_depth", ("batcher",))
+        self._m_submitted.touch(**self._labels)
+        self._m_depth.touch(**self._labels)
 
     def __len__(self) -> int:
         return len(self.queue)
 
     def submit(self, req: GraphRequest) -> None:
         self.queue.append(req)
+        self._m_submitted.inc(**self._labels)
+        self._m_depth.set(len(self.queue), **self._labels)
 
     # -- admission ----------------------------------------------------------
     def _fits(self, req: GraphRequest, nodes: int, edges: int,
@@ -110,4 +121,5 @@ class GraphBatcher:
             for req in reversed(batch):
                 self.queue.appendleft(req)
             return []
+        self._m_depth.set(len(self.queue), **self._labels)
         return batch

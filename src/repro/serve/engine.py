@@ -36,9 +36,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.data.graphs import (Graph, batch_graphs, synth_graph,
                                unbatch_nodes, unpad_nodes)
 from repro.models import gnn
+from repro.obs import span
 from repro.serve.batcher import GraphBatcher, GraphRequest
 from repro.serve.buckets import BucketPolicy, ShapeBucket, pad_to_bucket
 from repro.serve.plan_cache import (BucketEntry, PlanCache, bucket_max_chunks,
@@ -114,13 +116,36 @@ class GNNServer:
                                     max_batch_graphs=max_batch_graphs,
                                     max_wait_s=max_wait_s)
         self._uid = 0
-        self._trace_events = 0        # bumped inside executables at trace
         self.results: Dict[int, ServedResult] = {}
-        self._latencies: List[float] = []
-        self._batches = 0
-        self._serve_s = 0.0           # wall time inside step() serving
-        self._pad_node_frac: List[float] = []
-        self._pad_edge_frac: List[float] = []
+        # telemetry: all per-engine accounting lives in the repro.obs
+        # registry under this engine's instance label (vital — stats()
+        # works with observability disabled). reset() zeroes the window
+        # without dropping cache lines or compiled executables.
+        reg = obs.get_registry()
+        self._labels = {"engine": obs.next_id("engine")}
+        self._m_requests = reg.counter("serve.requests", ("engine",),
+                                       vital=True)
+        self._m_batches = reg.counter("serve.batches", ("engine",),
+                                      vital=True)
+        self._m_serve_s = reg.counter("serve.serve_s", ("engine",),
+                                      vital=True)
+        self._m_compiles = reg.counter("serve.compiles", ("engine",),
+                                       vital=True)
+        self._m_latency = reg.histogram("serve.request_latency_s",
+                                        ("engine",), vital=True)
+        self._m_queue = reg.histogram("serve.queue_s", ("engine",),
+                                      vital=True)
+        self._m_pad_nodes = reg.histogram("serve.pad_node_frac",
+                                          ("engine",), vital=True,
+                                          buckets=(1.0, 1.5, 2.0, 4.0, 8.0))
+        self._m_pad_edges = reg.histogram("serve.pad_edge_frac",
+                                          ("engine",), vital=True,
+                                          buckets=(1.0, 1.5, 2.0, 4.0, 8.0))
+        for m in (self._m_requests, self._m_batches, self._m_serve_s,
+                  self._m_compiles, self._m_latency, self._m_queue,
+                  self._m_pad_nodes, self._m_pad_edges):
+            m.touch(**self._labels)
+        self._compile_cause = "cold"  # attribution for the next trace
 
     # -- admission -----------------------------------------------------------
     def submit(self, graph: Graph, uid: Optional[int] = None) -> int:
@@ -170,6 +195,18 @@ class GNNServer:
         entry.executable = self._make_executable(bucket)
         return entry
 
+    def _note_trace(self, bucket: ShapeBucket) -> None:
+        """Fires as a Python side effect at trace time only — it IS the
+        compile counter the stats report, and every firing leaves an
+        attribution record naming the bucket and the cause that led the
+        engine here (warmup / bucket_miss / sampled_ingest / ...)."""
+        self._m_compiles.inc(**self._labels)
+        obs.record_compile(
+            "serve.forward", self._compile_cause,
+            engine=self._labels["engine"], bucket=str(bucket),
+            model=self.model, impl=self.impl, feat=self.feat,
+            shards=self.shards)
+
     def _make_executable(self, bucket: ShapeBucket):
         """One jitted forward per bucket. The plan rides as a pytree arg:
         its leaves (chunk metadata) change per request, its static aux is
@@ -182,14 +219,14 @@ class GNNServer:
             mesh = self._mesh
 
             def fwd_sharded(params, x, edge_index, dis, plan, partition):
-                self._trace_events += 1
+                self._note_trace(bucket)
                 return gnn.forward(params, model, x, edge_index, num_nodes,
                                    dis, impl=impl, plan=plan, mesh=mesh,
                                    partition=partition)
             return jax.jit(fwd_sharded)
 
         def fwd(params, x, edge_index, dis, plan):
-            self._trace_events += 1
+            self._note_trace(bucket)
             return gnn.forward(params, model, x, edge_index, num_nodes, dis,
                                impl=impl, plan=plan)
         return jax.jit(fwd)
@@ -200,63 +237,83 @@ class GNNServer:
         reqs = self.batcher.next_batch(flush=flush)
         if not reqs:
             return []
-        t0 = time.perf_counter()
-        batch = batch_graphs([r.graph for r in reqs])
-        padded, bucket = pad_to_bucket(batch, self.policy)
-        entry = self.cache.get_or_build(
-            self._entry_key(bucket),
-            lambda: self._build_entry(bucket),
-            weight=len(reqs))
-        hit = entry.compiled
+        with span("serve.step", engine=self._labels["engine"],
+                  requests=len(reqs)) as root:
+            t0 = time.perf_counter()
+            with span("serve.batch", graphs=len(reqs)):
+                batch = batch_graphs([r.graph for r in reqs])
+            with span("serve.pad"):
+                padded, bucket = pad_to_bucket(batch, self.policy)
+            root.set(bucket=str(bucket))
+            self._compile_cause = "bucket_miss"
+            with span("serve.plan_cache", bucket=str(bucket)):
+                entry = self.cache.get_or_build(
+                    self._entry_key(bucket),
+                    lambda: self._build_entry(bucket),
+                    weight=len(reqs))
+            hit = entry.compiled
 
-        from repro.kernels.ops import fusion_scope
-        traces_before = self._trace_events
-        with fusion_scope() as fusion:
-            logits = self._run(entry, padded)
-        logits = np.asarray(jax.block_until_ready(logits))
-        if not entry.compiled:
-            entry.compiled = True
-            entry.compile_s = time.perf_counter() - t0
-            self.cache.stats.compile_s += entry.compile_s
-        self.cache.stats.compiles += self._trace_events - traces_before
+            from repro.kernels.ops import fusion_scope
+            traces_before = self.compiles
+            with fusion_scope() as fusion:
+                logits = self._run(entry, padded, compiled=hit)
+            logits = np.asarray(jax.block_until_ready(logits))
+            if not entry.compiled:
+                entry.compiled = True
+                entry.compile_s = time.perf_counter() - t0
+                self.cache.stats.compile_s += entry.compile_s
+            self.cache.stats.compiles += self.compiles - traces_before
 
-        t1 = time.perf_counter()
-        self._batches += 1
-        self._serve_s += t1 - t0
-        self._pad_node_frac.append(bucket.num_nodes / max(batch.num_nodes, 1))
-        self._pad_edge_frac.append(bucket.num_edges / max(batch.num_edges, 1))
-        per_graph = unbatch_nodes(batch, unpad_nodes(padded, logits))
-        fusion_counts = dict(fusion)
-        out = []
-        for req, y in zip(reqs, per_graph):
-            res = ServedResult(
-                uid=req.uid, logits=y, bucket=bucket, batch_size=len(reqs),
-                queue_s=t0 - req.t_submit, serve_s=t1 - t0,
-                latency_s=t1 - req.t_submit, cache_hit=hit,
-                compiled=not hit,
-                pad_nodes=bucket.num_nodes - batch.num_nodes,
-                pad_edges=bucket.num_edges - batch.num_edges,
-                fusion=fusion_counts)
-            self.results[req.uid] = res
-            self._latencies.append(res.latency_s)
-            out.append(res)
-        return out
+            t1 = time.perf_counter()
+            self._m_batches.inc(**self._labels)
+            self._m_serve_s.inc(t1 - t0, **self._labels)
+            self._m_pad_nodes.observe(
+                bucket.num_nodes / max(batch.num_nodes, 1), **self._labels)
+            self._m_pad_edges.observe(
+                bucket.num_edges / max(batch.num_edges, 1), **self._labels)
+            per_graph = unbatch_nodes(batch, unpad_nodes(padded, logits))
+            fusion_counts = dict(fusion)
+            out = []
+            for req, y in zip(reqs, per_graph):
+                res = ServedResult(
+                    uid=req.uid, logits=y, bucket=bucket,
+                    batch_size=len(reqs),
+                    queue_s=t0 - req.t_submit, serve_s=t1 - t0,
+                    latency_s=t1 - req.t_submit, cache_hit=hit,
+                    compiled=not hit,
+                    pad_nodes=bucket.num_nodes - batch.num_nodes,
+                    pad_edges=bucket.num_edges - batch.num_edges,
+                    fusion=fusion_counts)
+                self.results[req.uid] = res
+                self._m_requests.inc(**self._labels)
+                self._m_latency.observe(res.latency_s, **self._labels)
+                self._m_queue.observe(res.queue_s, **self._labels)
+                out.append(res)
+            return out
 
-    def _run(self, entry: BucketEntry, padded: Graph):
+    def _run(self, entry: BucketEntry, padded: Graph,
+             compiled: Optional[bool] = None):
         x = jnp.asarray(padded.x)
         dis = jnp.asarray(padded.deg_inv_sqrt)
         ei = jnp.asarray(padded.edge_index)
+        if compiled is None:
+            compiled = entry.compiled
+        exec_span = "serve.execute" if compiled else "serve.compile"
         if self.shards > 1:
             # the sharded path consumes a PartitionedPlan; the bucket
             # template's stamp is single-device-only and is skipped here
             from repro.core.plan import make_partitioned_plan
             from repro.data.partition import partition_graph
-            pg = partition_graph(padded, self.shards)
-            pplan = make_partitioned_plan(pg, feat=self.feat,
-                                          config=entry.config)
-            return entry.executable(self.params, x, ei, dis, pplan, pg)
-        plan = entry.stamp(padded.edge_index[1])
-        return entry.executable(self.params, x, ei, dis, plan)
+            with span("serve.stamp", sharded=True):
+                pg = partition_graph(padded, self.shards)
+                pplan = make_partitioned_plan(pg, feat=self.feat,
+                                              config=entry.config)
+            with span(exec_span, bucket=str(entry.bucket)):
+                return entry.executable(self.params, x, ei, dis, pplan, pg)
+        with span("serve.stamp"):
+            plan = entry.stamp(padded.edge_index[1])
+        with span(exec_span, bucket=str(entry.bucket)):
+            return entry.executable(self.params, x, ei, dis, plan)
 
     # -- sampled (out-of-core) ingest -----------------------------------------
     def sampled_pipeline(self, sampler, *, depth: int = 2,
@@ -287,26 +344,35 @@ class GNNServer:
         engine's entry so the executable never retraces on aux drift."""
         if self.shards > 1:
             raise NotImplementedError("sampled serving is single-device")
-        t0 = time.perf_counter()
-        entry = self.cache.get_or_build(
-            self._entry_key(batch.bucket),
-            lambda: self._build_entry(batch.bucket))
-        plan = batch.plan
-        if plan.config != entry.config or plan.max_chunks != entry.max_chunks:
-            plan = entry.stamp(batch.graph.edge_index[1])
-        traces_before = self._trace_events
-        logits = entry.executable(
-            self.params, batch.arrays["x"], batch.arrays["edge_index"],
-            batch.arrays["deg_inv_sqrt"], plan)
-        logits = np.asarray(jax.block_until_ready(logits))
-        if not entry.compiled:
-            entry.compiled = True
-            entry.compile_s = time.perf_counter() - t0
-            self.cache.stats.compile_s += entry.compile_s
-        self.cache.stats.compiles += self._trace_events - traces_before
-        self._batches += 1
-        self._serve_s += time.perf_counter() - t0
-        return logits[:batch.num_seeds]
+        with span("serve.step", engine=self._labels["engine"],
+                  bucket=str(batch.bucket), sampled=True):
+            t0 = time.perf_counter()
+            self._compile_cause = "sampled_ingest"
+            with span("serve.plan_cache", bucket=str(batch.bucket)):
+                entry = self.cache.get_or_build(
+                    self._entry_key(batch.bucket),
+                    lambda: self._build_entry(batch.bucket))
+            plan = batch.plan
+            if (plan.config != entry.config
+                    or plan.max_chunks != entry.max_chunks):
+                with span("serve.stamp", restamp=True):
+                    plan = entry.stamp(batch.graph.edge_index[1])
+            traces_before = self.compiles
+            exec_span = "serve.execute" if entry.compiled else "serve.compile"
+            with span(exec_span, bucket=str(batch.bucket)):
+                logits = entry.executable(
+                    self.params, batch.arrays["x"],
+                    batch.arrays["edge_index"],
+                    batch.arrays["deg_inv_sqrt"], plan)
+                logits = np.asarray(jax.block_until_ready(logits))
+            if not entry.compiled:
+                entry.compiled = True
+                entry.compile_s = time.perf_counter() - t0
+                self.cache.stats.compile_s += entry.compile_s
+            self.cache.stats.compiles += self.compiles - traces_before
+            self._m_batches.inc(**self._labels)
+            self._m_serve_s.inc(time.perf_counter() - t0, **self._labels)
+            return logits[:batch.num_seeds]
 
     def run_until_drained(self, max_steps: int = 100_000
                           ) -> Dict[int, ServedResult]:
@@ -331,6 +397,7 @@ class GNNServer:
                 f"{self.cache.capacity} cache would evict the earliest "
                 "prefills immediately; raise cache_capacity")
         compiled = 0
+        self._compile_cause = "warmup"
         for bucket in buckets:
             entry = self.cache.warm(self._entry_key(bucket),
                                     lambda b=bucket: self._build_entry(b))
@@ -340,12 +407,12 @@ class GNNServer:
                             feat=_input_feat(self.params, self.model))
             padded, _ = pad_to_bucket(g, bucket=bucket)
             t0 = time.perf_counter()
-            traces_before = self._trace_events
-            jax.block_until_ready(self._run(entry, padded))
+            traces_before = self.compiles
+            jax.block_until_ready(self._run(entry, padded, compiled=False))
             entry.compiled = True
             entry.compile_s = time.perf_counter() - t0
             self.cache.stats.compile_s += entry.compile_s
-            self.cache.stats.compiles += self._trace_events - traces_before
+            self.cache.stats.compiles += self.compiles - traces_before
             compiled += 1
         return compiled
 
@@ -353,28 +420,49 @@ class GNNServer:
     @property
     def compiles(self) -> int:
         """Executable traces so far (warmup + serving)."""
-        return self._trace_events
+        return int(self._m_compiles.value(**self._labels))
 
     def stats(self) -> Dict:
-        lat = np.asarray(self._latencies) if self._latencies else None
+        """The engine's serving-window summary, read off the registry.
+
+        Well-defined on a cold engine: every count is 0, throughput /
+        latencies are 0.0 and pad overheads 1.0 (no padding observed ==
+        no waste) — never a ZeroDivisionError or NaN."""
+        requests = int(self._m_requests.value(**self._labels))
+        batches = int(self._m_batches.value(**self._labels))
+        serve_s = self._m_serve_s.value(**self._labels)
+        n_lat = self._m_latency.count(**self._labels)
+        n_pad = self._m_pad_nodes.count(**self._labels)
         return {
-            "requests": len(self.results),
-            "batches": self._batches,
-            "mean_batch_size": (len(self.results) / self._batches
-                                if self._batches else 0.0),
-            "compiles": self._trace_events,
+            "requests": requests,
+            "batches": batches,
+            "mean_batch_size": requests / batches if batches else 0.0,
+            "compiles": self.compiles,
             "buckets": len(self.cache),
             "cache": self.cache.stats.as_dict(),
-            "throughput_rps": (len(self.results) / self._serve_s
-                               if self._serve_s else 0.0),
-            "latency_mean_s": float(lat.mean()) if lat is not None else 0.0,
-            "latency_p95_s": (float(np.percentile(lat, 95))
-                              if lat is not None else 0.0),
-            "pad_node_overhead": (float(np.mean(self._pad_node_frac))
-                                  if self._pad_node_frac else 1.0),
-            "pad_edge_overhead": (float(np.mean(self._pad_edge_frac))
-                                  if self._pad_edge_frac else 1.0),
+            "throughput_rps": requests / serve_s if serve_s else 0.0,
+            "latency_mean_s": (self._m_latency.mean(**self._labels)
+                               if n_lat else 0.0),
+            "latency_p95_s": (self._m_latency.percentile(95, **self._labels)
+                              if n_lat else 0.0),
+            "pad_node_overhead": (self._m_pad_nodes.mean(**self._labels)
+                                  if n_pad else 1.0),
+            "pad_edge_overhead": (self._m_pad_edges.mean(**self._labels)
+                                  if n_pad else 1.0),
         }
+
+    def reset(self) -> None:
+        """Zero this engine's serving-window accounting (counters,
+        latency/padding histograms, delivered results). Cache lines and
+        compiled executables are kept — ``reset()`` starts a fresh
+        measurement window, not a fresh engine — so ``stats()`` right
+        after is the documented cold-path shape."""
+        for m in (self._m_requests, self._m_batches, self._m_serve_s,
+                  self._m_compiles, self._m_latency, self._m_queue,
+                  self._m_pad_nodes, self._m_pad_edges):
+            m.reset(**self._labels)
+            m.touch(**self._labels)
+        self.results.clear()
 
 
 def _widest_layer(params) -> int:

@@ -156,17 +156,31 @@ class BucketEntry:
         return self._stamp_plan(dst, self.template)
 
 
-@dataclasses.dataclass
 class CacheStats:
-    """Hit/miss/eviction + build/compile-time accounting."""
-    hits: int = 0
-    misses: int = 0
-    evictions: int = 0
-    prefills: int = 0             # warm() entries (not counted as misses)
-    plan_builds: int = 0          # BucketEntry constructions
-    compiles: int = 0             # executable traces (engine-reported)
-    plan_build_s: float = 0.0
-    compile_s: float = 0.0
+    """Hit/miss/eviction + build/compile-time accounting — a view over
+    labeled instruments in the :mod:`repro.obs` metrics registry. Each
+    stats object carries a process-unique ``cache`` label, so every
+    PlanCache's counters export side by side in one telemetry dump;
+    the instruments are *vital* (they count even when observability is
+    disabled — the serving contract's tests rely on them). Attribute
+    reads/writes (``stats.hits += 1``) go straight through to the
+    registry series."""
+
+    _INT_FIELDS = ("hits", "misses", "evictions", "prefills",
+                   "plan_builds", "compiles")
+    _FLOAT_FIELDS = ("plan_build_s", "compile_s")
+
+    def __init__(self, cache_id: Optional[str] = None):
+        from repro import obs
+        reg = obs.get_registry()
+        self.cache_id = cache_id or obs.next_id("cache")
+        self._labels = {"cache": self.cache_id}
+        self._metrics = {
+            f: reg.counter(f"serve.plan_cache.{f}", labels=("cache",),
+                           vital=True)
+            for f in self._INT_FIELDS + self._FLOAT_FIELDS}
+        for m in self._metrics.values():
+            m.touch(**self._labels)
 
     @property
     def lookups(self) -> int:
@@ -177,9 +191,28 @@ class CacheStats:
         return self.hits / self.lookups if self.lookups else 0.0
 
     def as_dict(self) -> Dict:
-        d = dataclasses.asdict(self)
+        d = {f: getattr(self, f)
+             for f in self._INT_FIELDS + self._FLOAT_FIELDS}
         d["hit_rate"] = round(self.hit_rate, 4)
         return d
+
+
+def _stats_field(field: str, as_int: bool):
+    def fget(self):
+        v = self._metrics[field].value(**self._labels)
+        return int(v) if as_int else v
+
+    def fset(self, v):
+        self._metrics[field].set(float(v), **self._labels)
+
+    return property(fget, fset)
+
+
+for _f in CacheStats._INT_FIELDS:
+    setattr(CacheStats, _f, _stats_field(_f, as_int=True))
+for _f in CacheStats._FLOAT_FIELDS:
+    setattr(CacheStats, _f, _stats_field(_f, as_int=False))
+del _f
 
 
 class PlanCache:
@@ -225,6 +258,9 @@ class PlanCache:
             entry = self._entries.get(key)
             if entry is None:
                 self.stats.misses += weight
+                from repro import obs
+                obs.record_cache_event(self.stats.cache_id, "miss",
+                                       key=str(key), weight=weight)
                 return None
             self._entries.move_to_end(key)
             self.stats.hits += weight
@@ -235,8 +271,12 @@ class PlanCache:
             self._entries[key] = entry
             self._entries.move_to_end(key)
             while len(self._entries) > self.capacity:
-                self._entries.popitem(last=False)
+                old_key, _ = self._entries.popitem(last=False)
                 self.stats.evictions += 1
+                from repro import obs
+                obs.record_cache_event(self.stats.cache_id, "eviction",
+                                       key=str(old_key),
+                                       capacity=self.capacity)
 
     def get_or_build(self, key: Hashable,
                      builder: Callable[[], BucketEntry],

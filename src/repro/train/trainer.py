@@ -30,7 +30,9 @@ from typing import Any, Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.checkpoint import checkpoint as ckpt
+from repro.obs import span
 from repro.distributed.fault_tolerance import (ResilientLoop,
                                                ResilientLoopConfig)
 from repro.optim import adamw, schedule
@@ -106,7 +108,29 @@ class Trainer:
         self.config = config
         self.tune = tune
         self._execs: dict = {}        # static signature -> jitted step
-        self._trace_events = 0        # bumped at trace time (== compiles)
+        # telemetry: per-trainer accounting in the repro.obs registry
+        # (vital — `traces` works with observability disabled)
+        reg = obs.get_registry()
+        self._labels = {"trainer": obs.next_id("trainer")}
+        self._m_steps = reg.counter("train.steps", ("trainer",), vital=True)
+        self._m_traces = reg.counter("train.traces", ("trainer",),
+                                     vital=True)
+        self._m_steps.touch(**self._labels)
+        self._m_traces.touch(**self._labels)
+        self._traced_statics: set = set()   # signatures already compiled
+
+    def _note_trace(self, static) -> None:
+        """Trace-time side effect: fires once per compile, never on
+        re-invocation — it IS the trace counter ``traces`` reports. Each
+        firing leaves an attribution record naming the static signature
+        and whether it was a fresh bucket or an unexpected retrace."""
+        cause = ("new_bucket" if static not in self._traced_statics
+                 else "retrace")
+        self._traced_statics.add(static)
+        self._m_traces.inc(**self._labels)
+        obs.record_compile("train.step", cause,
+                           trainer=self._labels["trainer"],
+                           static=repr(static))
 
     # -- state ---------------------------------------------------------------
 
@@ -121,7 +145,7 @@ class Trainer:
     def traces(self) -> int:
         """Train-step traces so far — the compile counter. After warmup
         this equals ``len(self.buckets)``: one trace per shape bucket."""
-        return self._trace_events
+        return int(self._m_traces.value(**self._labels))
 
     @property
     def buckets(self) -> tuple:
@@ -140,9 +164,7 @@ class Trainer:
         lr_scale_fn = schedule.get(cfg.lr_schedule)
 
         def step(state: TrainState, arrays):
-            # trace-time side effect: fires once per compile, never on
-            # re-invocation — it IS the trace counter `traces` reports
-            self._trace_events += 1
+            self._note_trace(static)
             rng = jax.random.fold_in(state.rng, state.step)
 
             def loss(p):
@@ -191,17 +213,27 @@ class Trainer:
         history: dict = {}            # step -> loss (replay overwrites)
 
         def step_fn(st, step):
-            batch = self.data.batch(step)
-            arrays, static = self.task.prepare(
-                batch, plan=self.plan, config=self.config, tune=self.tune,
-                mesh=self.mesh)
-            st, metrics = self._executable(static)(st, arrays)
-            loss = float(metrics["loss"])
-            history[step] = loss
-            if cfg.log_every and step % cfg.log_every == 0:
-                print(f"step {step:5d} loss {loss:.4f} "
-                      f"traces {self._trace_events}", flush=True)
-            return st, metrics
+            with span("train.step", trainer=self._labels["trainer"],
+                      step=int(step)) as root:
+                with span("train.sample", step=int(step)):
+                    batch = self.data.batch(step)
+                with span("train.prepare"):
+                    arrays, static = self.task.prepare(
+                        batch, plan=self.plan, config=self.config,
+                        tune=self.tune, mesh=self.mesh)
+                root.set(static=repr(static))
+                compiled = static in self._traced_statics
+                exe = self._executable(static)
+                with span("train.execute" if compiled else "train.compile",
+                          static=repr(static)):
+                    st, metrics = exe(st, arrays)
+                self._m_steps.inc(**self._labels)
+                loss = float(metrics["loss"])
+                history[step] = loss
+                if cfg.log_every and step % cfg.log_every == 0:
+                    print(f"step {step:5d} loss {loss:.4f} "
+                          f"traces {self.traces}", flush=True)
+                return st, metrics
 
         loop = ResilientLoop(
             ResilientLoopConfig(
@@ -213,7 +245,7 @@ class Trainer:
         final = loop.run(cfg.steps, start_step=start, metrics_cb=metrics_cb)
         losses = [history[s] for s in sorted(history)]
         return FitResult(state=final, losses=losses, start_step=start,
-                         traces=self._trace_events, buckets=self.buckets,
+                         traces=self.traces, buckets=self.buckets,
                          events=tuple(loop.events))
 
 

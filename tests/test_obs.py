@@ -1,0 +1,457 @@
+"""Observability subsystem: registry semantics, export formats, span
+trees, attribution, and the regression contracts the PR pinned —
+thread-safe fusion counters, well-defined cold/reset engine stats, and
+schema stability of the exported metric set."""
+import json
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+import repro
+from repro import obs
+from repro.kernels import ops as kops
+from repro.obs.registry import MetricsRegistry
+
+
+@pytest.fixture(autouse=True)
+def clean_obs():
+    """Every test starts enabled with a zeroed registry / span ring /
+    event ring, and leaves the switch enabled for the next test."""
+    obs.enable()
+    obs.reset()
+    yield
+    obs.enable()
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_counter_gauge_labels_and_values():
+    reg = MetricsRegistry()
+    c = reg.counter("t.count", ("who",))
+    c.inc(who="a")
+    c.inc(2.5, who="a")
+    c.inc(who="b")
+    assert c.value(who="a") == 3.5
+    assert c.value(who="b") == 1.0
+    assert c.value(who="nobody") == 0.0          # unseen series reads 0
+    g = reg.gauge("t.level", ())
+    g.set(7)
+    g.set(3)
+    assert g.value() == 3.0
+
+
+def test_registration_idempotent_and_mismatch_raises():
+    reg = MetricsRegistry()
+    a = reg.counter("t.c", ("x",))
+    assert reg.counter("t.c", ("x",)) is a
+    with pytest.raises(ValueError):
+        reg.gauge("t.c", ("x",))                 # kind mismatch
+    with pytest.raises(ValueError):
+        reg.counter("t.c", ("y",))               # label mismatch
+    with pytest.raises(ValueError):
+        a.inc(y=1)                               # wrong label name
+
+
+def test_histogram_exact_percentiles_and_buckets():
+    reg = MetricsRegistry()
+    h = reg.histogram("t.lat", (), buckets=(10.0, 50.0, 100.0))
+    for v in range(1, 101):
+        h.observe(float(v))
+    assert h.count() == 100
+    assert h.total() == sum(range(1, 101))
+    assert h.percentile(50) == 50.0              # exact, not interpolated
+    assert h.percentile(95) == 95.0
+    assert h.percentile(99) == 99.0
+    s = h.series()
+    assert s.counts == [10, 40, 50, 0]           # <=10, <=50, <=100, +inf
+
+
+def test_snapshot_and_delta():
+    reg = MetricsRegistry()
+    c = reg.counter("t.c", ("k",))
+    h = reg.histogram("t.h", ())
+    c.inc(3, k="a")
+    h.observe(1.0)
+    snap = reg.snapshot()
+    assert {r["name"] for r in snap} == {"t.c", "t.h"}
+    hist_row = next(r for r in snap if r["name"] == "t.h")
+    assert hist_row["count"] == 1 and "p95" in hist_row
+    c.inc(2, k="a")
+    h.observe(4.0)
+    d = {r["name"]: r for r in reg.delta(snap)}
+    assert d["t.c"]["value"] == 2.0              # windowed, not cumulative
+    assert d["t.h"]["count"] == 1 and d["t.h"]["sum"] == 4.0
+
+
+def test_reset_keeps_instrument_handles():
+    reg = MetricsRegistry()
+    c = reg.counter("t.c", ())
+    c.inc(5)
+    reg.reset()
+    assert c.value() == 0.0
+    c.inc()                                      # old handle still live
+    assert c.value() == 1.0
+
+
+def test_disabled_mode_vital_vs_optional():
+    reg = MetricsRegistry()
+    vital = reg.counter("t.vital", (), vital=True)
+    opt = reg.counter("t.opt", ())
+    obs.disable()
+    try:
+        vital.inc()
+        opt.inc()
+        with obs.span("t.stage") as s:
+            s.set(ignored=True)                  # null span: no-op
+        assert vital.value() == 1.0              # vital always counts
+        assert opt.value() == 0.0                # optional is a no-op
+        assert obs.spans("t.stage") == []        # no span recorded
+    finally:
+        obs.enable()
+
+
+# ---------------------------------------------------------------------------
+# export
+# ---------------------------------------------------------------------------
+
+def test_jsonl_export_parses_and_stamps():
+    reg = MetricsRegistry()
+    reg.counter("t.c", ("k",)).inc(k="a")
+    lines = obs.to_jsonl(reg).splitlines()
+    rows = [json.loads(ln) for ln in lines]
+    kinds = [r["record"] for r in rows]
+    assert "metric" in kinds and kinds[-1] == "meta"
+    m = next(r for r in rows if r["record"] == "metric")
+    assert m["name"] == "t.c" and m["labels"] == {"k": "a"}
+
+
+def test_prometheus_export_format():
+    reg = MetricsRegistry()
+    reg.counter("serve.plan_cache.hits", ("cache",)).inc(5, cache="c0")
+    reg.histogram("t.lat", (), buckets=(1.0, 2.0)).observe(1.5)
+    text = obs.to_prometheus(reg)
+    assert 'repro_serve_plan_cache_hits{cache="c0"} 5.0' in text
+    assert "# TYPE repro_serve_plan_cache_hits counter" in text
+    assert 'repro_t_lat_bucket{le="2.0"} 1' in text
+    assert "repro_t_lat_count 1" in text
+
+
+def test_write_jsonl_atomic_and_flusher(tmp_path):
+    path = str(tmp_path / "metrics.jsonl")
+    obs.get_registry().counter("t.flush", (), vital=True).inc()
+    obs.start_flusher(path, every_s=3600)        # no tick: final write only
+    obs.stop_flusher()
+    rows = [json.loads(ln) for ln in open(path).read().splitlines()]
+    assert any(r.get("name") == "t.flush" for r in rows)
+
+
+# ---------------------------------------------------------------------------
+# spans
+# ---------------------------------------------------------------------------
+
+def test_span_tree_nesting_and_ring():
+    with obs.span("root", step=1) as r:
+        with obs.span("child.a"):
+            with obs.span("leaf"):
+                pass
+        with obs.span("child.b"):
+            pass
+    roots = obs.spans("root")
+    assert len(roots) == 1 and roots[0] is r
+    assert r.stages() == {"root", "child.a", "leaf", "child.b"}
+    assert r.find("leaf").name == "leaf"
+    assert [c.name for c in r.children] == ["child.a", "child.b"]
+    assert r.dur_s >= r.children[0].dur_s >= 0.0
+    assert r.attrs == {"step": 1}
+
+
+def test_thread_span_trees_do_not_interleave():
+    def worker():
+        with obs.span("worker.root"):
+            with obs.span("worker.leaf"):
+                pass
+
+    with obs.span("main.root"):
+        t = threading.Thread(target=worker)
+        t.start()
+        t.join()
+    main = obs.spans("main.root")[0]
+    work = obs.spans("worker.root")[0]
+    assert main.stages() == {"main.root"}        # worker never attached
+    assert work.stages() == {"worker.root", "worker.leaf"}
+
+
+def test_chrome_trace_export_valid():
+    with obs.span("outer", bucket="B(64,128)"):
+        with obs.span("inner"):
+            pass
+    doc = obs.chrome_trace()
+    json.dumps(doc)                              # must be serializable
+    events = doc["traceEvents"]
+    assert {e["name"] for e in events} == {"outer", "inner"}
+    for e in events:
+        assert e["ph"] == "X"
+        assert isinstance(e["ts"], float) and isinstance(e["dur"], float)
+    outer = next(e for e in events if e["name"] == "outer")
+    assert outer["args"]["bucket"] == "B(64,128)"
+
+
+# ---------------------------------------------------------------------------
+# attribution
+# ---------------------------------------------------------------------------
+
+def test_attribution_records_and_counters():
+    obs.record_compile("serve.forward", "bucket_miss", bucket="B(64,128)")
+    obs.record_compile("train.step", "new_bucket", static="sig")
+    obs.record_tune("segment_reduce", cache_hit=False, timings=8)
+    obs.record_tune("segment_reduce", cache_hit=True)
+    compiles = obs.why_compiled()
+    assert [e["cause"] for e in compiles] == ["bucket_miss", "new_bucket"]
+    assert compiles[0]["bucket"] == "B(64,128)"
+    reg = obs.get_registry()
+    assert reg.get("compile.events").value(
+        site="serve.forward", cause="bucket_miss") == 1.0
+    assert reg.get("autotune.tunes").value(
+        op="segment_reduce", outcome="sweep") == 1.0
+    assert reg.get("autotune.tunes").value(
+        op="segment_reduce", outcome="hit") == 1.0
+    assert obs.attributions("tune")[0]["timings"] == 8
+
+
+# ---------------------------------------------------------------------------
+# satellite: thread-safe fusion counters (kernels/ops.py)
+# ---------------------------------------------------------------------------
+
+def test_fusion_account_concurrent_no_lost_updates():
+    kops.reset_fusion_counts()
+    n_threads, per_thread = 8, 200
+
+    def hammer():
+        for _ in range(per_thread):
+            kops.account("fused", "concurrency_test")
+
+    threads = [threading.Thread(target=hammer) for _ in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    counts = kops.fusion_counts()
+    assert counts["fused:concurrency_test"] == n_threads * per_thread
+    kops.reset_fusion_counts()
+
+
+def test_fusion_scope_isolated_from_other_threads():
+    """A scope opened in one thread must never capture launches accounted
+    from other threads (prefetch producers) — they fold into the global."""
+    kops.reset_fusion_counts()
+    started, release = threading.Event(), threading.Event()
+
+    def producer():
+        started.set()
+        release.wait(timeout=5)
+        kops.account("fused", "producer_op")
+
+    t = threading.Thread(target=producer)
+    t.start()
+    started.wait(timeout=5)
+    with kops.fusion_scope() as mine:
+        kops.account("fused", "my_op")
+        release.set()
+        t.join()
+        assert dict(mine) == {"fused:my_op": 1}  # producer's not captured
+    assert kops.fusion_counts()["fused:producer_op"] == 1
+    assert kops.fusion_counts()["fused:my_op"] == 1
+    kops.reset_fusion_counts()
+
+
+def test_fusion_launches_mirrored_to_registry():
+    before = obs.get_registry().counter(
+        "kernel.launches", ("kind", "op")).value(
+        kind="fused", op="mirror_test")
+    kops.account("fused", "mirror_test")
+    after = obs.get_registry().get("kernel.launches").value(
+        kind="fused", op="mirror_test")
+    assert after == before + 1
+    kops.reset_fusion_counts()
+
+
+# ---------------------------------------------------------------------------
+# satellite: engine cold stats + reset parity
+# ---------------------------------------------------------------------------
+
+def _tiny_server(**kw):
+    params = repro.gnn_init(jax.random.PRNGKey(0), "gcn", 8, 16, 4)
+    return repro.GNNServer(params, "gcn", **kw)
+
+
+def test_server_cold_stats_well_defined():
+    srv = _tiny_server()
+    st = srv.stats()
+    assert st["requests"] == 0 and st["batches"] == 0
+    assert st["compiles"] == 0 and st["buckets"] == 0
+    assert st["mean_batch_size"] == 0.0
+    assert st["throughput_rps"] == 0.0
+    assert st["latency_mean_s"] == 0.0 and st["latency_p95_s"] == 0.0
+    assert st["pad_node_overhead"] == 1.0        # no padding observed
+    assert st["pad_edge_overhead"] == 1.0
+    assert st["cache"]["hit_rate"] == 0.0
+    for v in st.values():                        # nothing NaN anywhere
+        if isinstance(v, float):
+            assert np.isfinite(v)
+
+
+def test_server_reset_returns_to_cold_window():
+    srv = _tiny_server(max_batch_graphs=4)
+    for i in range(4):
+        srv.submit(repro.synth_graph(f"g{i}", 16, 48, feat=8))
+    srv.run_until_drained()
+    busy = srv.stats()
+    assert busy["requests"] == 4 and busy["batches"] >= 1
+    assert busy["compiles"] >= 1
+    kept_buckets = busy["buckets"]
+    srv.reset()
+    st = srv.stats()
+    assert st["requests"] == 0 and st["batches"] == 0
+    assert st["compiles"] == 0 and st["throughput_rps"] == 0.0
+    assert st["latency_mean_s"] == 0.0
+    assert st["pad_node_overhead"] == 1.0
+    assert st["buckets"] == kept_buckets         # cache lines survive
+    assert srv.results == {}
+    # the kept executables still serve without recompiling
+    srv.submit(repro.synth_graph("again", 16, 48, feat=8))
+    srv.run_until_drained()
+    assert srv.stats()["requests"] == 1
+
+
+# ---------------------------------------------------------------------------
+# satellite: schema stability
+# ---------------------------------------------------------------------------
+
+def test_exported_schema_is_exactly_the_documented_set(tmp_path):
+    """Exercise every instrumented subsystem, then assert the registry's
+    exported names + label sets are exactly repro.obs.OBS_SCHEMA — a
+    rename or an undocumented metric breaks here first."""
+    # serving (engine + batcher + plan cache + kernel launches + compile)
+    srv = _tiny_server(max_batch_graphs=4)
+    for i in range(3):
+        srv.submit(repro.synth_graph(f"s{i}", 16, 48, feat=8))
+    srv.run_until_drained()
+    # out-of-core pipeline (producer + prefetch counters)
+    big = repro.synth_graph("ooc", 128, 512, feat=8, num_classes=4)
+    sampler = repro.NeighborSampler(big, fanouts=(4,), batch_size=8, seed=0)
+    producer = repro.SampledBatchProducer(sampler, feat=8)
+    producer.buckets_for_warmup(probe_steps=2)
+    with repro.PrefetchPipeline(producer, depth=0) as pipe:
+        pipe.batch(0)
+    # training
+    data = repro.GraphEpochProvider(shapes=((32, 96),), graphs_per_shape=1,
+                                    feat=8, num_classes=4)
+    task = repro.NodeClassification.from_provider(data, model="gcn",
+                                                  hidden=8)
+    repro.fit(task, data, repro.TrainerConfig(steps=1))
+    # autotune attribution (measure_fn: no kernels actually timed)
+    from repro.core import autotune
+    db = autotune.PerfDB(str(tmp_path / "perfdb"))
+    autotune.tune(idx_size=64, num_segments=32, feat=8, db=db,
+                  measure_fn=lambda cfg: 1.0)
+
+    schema = obs.get_registry().schema()
+    # instruments registered under the test-local "t." namespace (this
+    # file) are excluded: registration is process-permanent by design
+    exported = {n: tuple(labels) for n, labels in schema.items()
+                if not n.startswith("t.")}
+    assert exported == obs.OBS_SCHEMA
+
+
+def test_jsonl_dump_matches_schema(tmp_path):
+    srv = _tiny_server(max_batch_graphs=2)
+    srv.submit(repro.synth_graph("g", 16, 48, feat=8))
+    srv.run_until_drained()
+    path = str(tmp_path / "m.jsonl")
+    obs.write_jsonl(path)
+    for ln in open(path).read().splitlines():
+        row = json.loads(ln)
+        if row["record"] != "metric":
+            continue
+        assert row["name"] in obs.OBS_SCHEMA
+        assert set(row["labels"]) == set(obs.OBS_SCHEMA[row["name"]])
+
+
+# ---------------------------------------------------------------------------
+# acceptance: complete span trees + attribution through the real paths
+# ---------------------------------------------------------------------------
+
+def test_serving_request_span_tree_complete():
+    srv = _tiny_server(max_batch_graphs=2)
+    srv.submit(repro.synth_graph("a", 16, 48, feat=8))
+    srv.run_until_drained()                      # cold: pays the compile
+    srv.submit(repro.synth_graph("b", 16, 48, feat=8))
+    srv.run_until_drained()                      # warm: cache hit
+    roots = obs.spans("serve.step")
+    assert len(roots) == 2
+    cold, warm = roots
+    assert {"serve.batch", "serve.pad", "serve.plan_cache", "serve.stamp",
+            "serve.compile"} <= cold.stages()
+    assert "serve.execute" in warm.stages()      # no recompile stage
+    assert "serve.compile" not in warm.stages()
+    assert "bucket" in cold.attrs
+    # every compile carries an attribution naming bucket and cause
+    compiles = obs.why_compiled()
+    assert len(compiles) == srv.compiles >= 1
+    for e in compiles:
+        assert e["site"] == "serve.forward"
+        assert e["cause"] == "bucket_miss"
+        assert "bucket" in e and "engine" in e
+    json.dumps(obs.chrome_trace(roots))          # exportable
+
+
+def test_warmup_compiles_attributed_as_warmup():
+    from repro.serve import bucket_for
+    srv = _tiny_server()
+    srv.warmup([bucket_for(16, 48, srv.policy)])
+    assert [e["cause"] for e in obs.why_compiled()] == ["warmup"]
+
+
+def test_training_step_span_tree_complete():
+    data = repro.GraphEpochProvider(shapes=((32, 96),), graphs_per_shape=1,
+                                    feat=8, num_classes=4)
+    task = repro.NodeClassification.from_provider(data, model="gcn",
+                                                  hidden=8)
+    res = repro.fit(task, data, repro.TrainerConfig(steps=2))
+    assert res.traces == 1
+    roots = obs.spans("train.step")
+    assert len(roots) == 2
+    first, second = roots
+    assert {"train.sample", "train.prepare",
+            "train.compile"} <= first.stages()
+    assert "train.execute" in second.stages()
+    assert "train.compile" not in second.stages()
+    compiles = obs.why_compiled()
+    assert [e["cause"] for e in compiles] == ["new_bucket"]
+    assert compiles[0]["site"] == "train.step"
+    json.dumps(obs.chrome_trace(roots))
+
+
+def test_pipeline_produce_span_tree_complete():
+    big = repro.synth_graph("ooc", 128, 512, feat=8, num_classes=4)
+    sampler = repro.NeighborSampler(big, fanouts=(4,), batch_size=8, seed=0)
+    producer = repro.SampledBatchProducer(sampler, feat=8)
+    with repro.PrefetchPipeline(producer, depth=0) as pipe:
+        pipe.batch(0)
+    root = obs.spans("pipeline.produce")[0]
+    assert {"pipeline.sample", "pipeline.pad", "pipeline.plan_cache",
+            "pipeline.stamp", "pipeline.device_put"} <= root.stages()
+    assert "bucket" in root.attrs
+
+
+def test_report_smoke():
+    srv = _tiny_server(max_batch_graphs=2)
+    srv.submit(repro.synth_graph("g", 16, 48, feat=8))
+    srv.run_until_drained()
+    text = obs.report()
+    assert "serve.requests" in text
+    assert "compile" in text
